@@ -1,0 +1,34 @@
+"""Ablation: DSE quality vs cost — paper's merge (Alg. 3), our sweep, and
+exhaustive search on truncated networks where exhaustion is feasible.
+Quantifies the optimality gap of each heuristic (the paper could not run
+exhaustive search on the board; we can against the board model)."""
+import time
+
+from repro.core import exhaustive_search, pipe_it_search
+
+from .common import PLAT, cnn_descriptors, fmt_row, gt_time_matrix
+
+
+def run():
+    rows = []
+    for net, n in (("mobilenet", 10), ("resnet50", 9), ("googlenet", 8)):
+        descs = cnn_descriptors(net)[:n]
+        T = gt_time_matrix(descs)
+        t0 = time.perf_counter()
+        best = exhaustive_search(n, PLAT, T)
+        t_ex = time.perf_counter() - t0
+        res = {}
+        for mode in ("merge", "sweep"):
+            t0 = time.perf_counter()
+            plan = pipe_it_search(n, PLAT, T, mode=mode)
+            dt = time.perf_counter() - t0
+            res[mode] = (plan.throughput(T) / best.throughput(T), dt)
+        rows.append(
+            fmt_row(
+                f"ablation_dse_{net}_first{n}", t_ex * 1e6,
+                f"exhaustive={best.throughput(T):.2f}img/s ({t_ex:.1f}s) | "
+                f"merge={res['merge'][0]*100:.1f}%opt ({res['merge'][1]*1e3:.0f}ms) "
+                f"sweep={res['sweep'][0]*100:.1f}%opt ({res['sweep'][1]*1e3:.0f}ms)",
+            )
+        )
+    return rows

@@ -1,0 +1,25 @@
+"""Eq. 1/2: design-space sizes (64 pipelines; 5,379,616 MobileNet points)."""
+import time
+
+from repro.cnn import MODELS
+from repro.core import design_space_size, num_pipelines
+
+from .common import fmt_row
+
+
+def run():
+    t0 = time.perf_counter()
+    pipes = sum(num_pipelines(4, 4, p) for p in range(2, 9))
+    sizes = {
+        net: design_space_size(len(MODELS[net]().descriptors()), 4, 4)
+        for net in MODELS
+    }
+    us = (time.perf_counter() - t0) * 1e6
+    return [
+        fmt_row(
+            "eq12_design_space", us,
+            f"pipelines={pipes} (paper: 64) "
+            + " ".join(f"{n}={s}" for n, s in sizes.items())
+            + f" | mobilenet_W29={design_space_size(29, 4, 4)} (paper: 5379616)",
+        )
+    ]

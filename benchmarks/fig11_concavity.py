@@ -1,0 +1,28 @@
+"""Fig. 11: concavity of multi-threaded speedup for AlexNet conv layers —
+the property that justifies Algorithm 3's merge-stop rule (Eq. 14)."""
+import time
+
+from .common import cnn_descriptors, fmt_row, gt_multi
+
+
+def run():
+    descs = [d for d in cnn_descriptors("alexnet") if d.kind != "fc"]
+    rows = []
+    t0 = time.perf_counter()
+    concave_all = True
+    details = []
+    for d in descs[:5]:
+        t = [gt_multi(d.gemm_dims(), c, "B") for c in (1, 2, 3, 4)]
+        sp = [t[0] / x for x in t]
+        gains = [b - a for a, b in zip(sp, sp[1:])]
+        concave = all(g2 <= g1 + 0.15 for g1, g2 in zip(gains, gains[1:]))
+        concave_all &= concave
+        details.append(f"{d.name}:sp4={sp[3]:.2f}")
+    us = (time.perf_counter() - t0) * 1e6 / len(descs[:5])
+    rows.append(
+        fmt_row(
+            "fig11_concavity_alexnet", us,
+            " ".join(details) + f" | concave={concave_all}",
+        )
+    )
+    return rows

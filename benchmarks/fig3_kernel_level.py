@@ -1,0 +1,37 @@
+"""Fig. 3: throughput vs core configuration under the default kernel-level
+strategy — the cross-cluster collapse that motivates Pipe-it."""
+import time
+
+from .common import (
+    cnn_descriptors,
+    fmt_row,
+    gt_hetero_kernel_level,
+    gt_multi,
+)
+
+CONFIGS = [  # (label, n_big, n_small)
+    ("1B", 1, 0), ("2B", 2, 0), ("3B", 3, 0), ("4B", 4, 0),
+    ("4B+1s", 4, 1), ("4B+2s", 4, 2), ("4B+3s", 4, 3), ("4B+4s", 4, 4),
+]
+
+
+def run():
+    rows = []
+    for net in ("alexnet", "googlenet", "mobilenet", "resnet50", "squeezenet"):
+        descs = cnn_descriptors(net)
+        t0 = time.perf_counter()
+        tps = {}
+        for label, nb, ns in CONFIGS:
+            total = sum(
+                gt_hetero_kernel_level(d.gemm_dims(), nb, ns) for d in descs
+            )
+            tps[label] = 1.0 / total
+        us = (time.perf_counter() - t0) * 1e6 / len(CONFIGS)
+        collapse = tps["4B+4s"] <= tps["4B"] * 1.02  # paper: no gain over 4B
+        scaling = tps["4B"] > tps["1B"] * 2
+        derived = (
+            f"{net}: " + " ".join(f"{l}={tps[l]:.2f}" for l, _, _ in CONFIGS)
+            + f" | collapse_beyond_4B={collapse} intra_cluster_scales={scaling}"
+        )
+        rows.append(fmt_row(f"fig3_kernel_level_{net}", us, derived))
+    return rows

@@ -1,0 +1,34 @@
+"""Fig. 5: exhaustive sweep of disproportionate kernel-level splits between
+the clusters — no ratio significantly beats Big-only (the paper's point
+that the problem is structural, not a load-balance artifact)."""
+import time
+
+import numpy as np
+
+from .common import cnn_descriptors, fmt_row, gt_hetero_kernel_level, gt_multi
+
+
+def run():
+    rows = []
+    ratios = np.linspace(0.5, 1.0, 11)
+    for net in ("alexnet", "googlenet", "mobilenet", "resnet50", "squeezenet"):
+        descs = cnn_descriptors(net)
+        t0 = time.perf_counter()
+        big_only = 1.0 / sum(gt_multi(d.gemm_dims(), 4, "B") for d in descs)
+        best_tp, best_r = -1.0, None
+        for r in ratios:
+            total = sum(
+                gt_hetero_kernel_level(d.gemm_dims(), 4, 4, big_share=float(r))
+                for d in descs
+            )
+            if 1.0 / total > best_tp:
+                best_tp, best_r = 1.0 / total, float(r)
+        us = (time.perf_counter() - t0) * 1e6 / len(ratios)
+        gain = best_tp / big_only - 1
+        derived = (
+            f"{net}: best_split_big_share={best_r:.2f} tp={best_tp:.2f} "
+            f"vs B4={big_only:.2f} gain={gain*100:+.1f}% "
+            f"no_significant_gain={gain < 0.05}"
+        )
+        rows.append(fmt_row(f"fig5_disproportionate_{net}", us, derived))
+    return rows

@@ -1,0 +1,25 @@
+"""Fig. 6: share of processing time spent in convolutional layers (the
+paper: conv dominates everywhere except AlexNet, where FC dominates)."""
+import time
+
+from .common import cnn_descriptors, fmt_row, gt_multi
+
+
+def run():
+    rows = []
+    for net in ("alexnet", "googlenet", "mobilenet", "resnet50", "squeezenet"):
+        descs = cnn_descriptors(net)
+        t0 = time.perf_counter()
+        conv_t = sum(
+            gt_multi(d.gemm_dims(), 4, "B") for d in descs if d.kind != "fc"
+        )
+        fc_t = sum(gt_multi(d.gemm_dims(), 4, "B") for d in descs if d.kind == "fc")
+        us = (time.perf_counter() - t0) * 1e6
+        share = conv_t / (conv_t + fc_t)
+        rows.append(
+            fmt_row(
+                f"fig6_conv_share_{net}", us,
+                f"{net}: conv_share={share*100:.1f}% fc_share={(1-share)*100:.1f}%",
+            )
+        )
+    return rows

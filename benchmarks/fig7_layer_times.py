@@ -1,0 +1,27 @@
+"""Fig. 7: distribution of conv processing time across layer depth — early
+layers are heavier, which is what makes Big-first pipelines natural."""
+import time
+
+import numpy as np
+
+from .common import cnn_descriptors, fmt_row, gt_multi
+
+
+def run():
+    rows = []
+    for net in ("alexnet", "googlenet", "mobilenet", "resnet50", "squeezenet"):
+        descs = [d for d in cnn_descriptors(net) if d.kind != "fc"]
+        t0 = time.perf_counter()
+        times = np.array([gt_multi(d.gemm_dims(), 1, "B") for d in descs])
+        us = (time.perf_counter() - t0) * 1e6
+        idx = np.arange(len(times))
+        corr = float(np.corrcoef(idx, times)[0, 1])
+        first_half = float(times[: len(times) // 2].sum() / times.sum())
+        rows.append(
+            fmt_row(
+                f"fig7_layer_times_{net}", us,
+                f"{net}: depth_time_corr={corr:+.2f} first_half_share={first_half*100:.0f}% "
+                f"decreasing_trend={corr < 0 or first_half > 0.5}",
+            )
+        )
+    return rows

@@ -1,0 +1,32 @@
+"""Fig. 8: two-stage (B4-s4) pipeline throughput across every split point;
+paper: optimal split ratio ranges 0.60 (GoogLeNet) to 0.90 (AlexNet)."""
+import time
+
+from repro.core.pipeline import Pipeline, PipelinePlan, contiguous_allocation
+
+from .common import cnn_descriptors, fmt_row, gt_time_matrix
+
+
+def run():
+    rows = []
+    pipe = Pipeline((("B", 4), ("s", 4)))
+    for net in ("alexnet", "googlenet", "mobilenet", "resnet50", "squeezenet"):
+        descs = cnn_descriptors(net)
+        T = gt_time_matrix(descs)
+        w = len(descs)
+        t0 = time.perf_counter()
+        best_tp, best_x = -1.0, None
+        for x in range(1, w):
+            plan = PipelinePlan(pipe, contiguous_allocation([x], w, 2))
+            tp = plan.throughput(T)
+            if tp > best_tp:
+                best_tp, best_x = tp, x
+        us = (time.perf_counter() - t0) * 1e6 / (w - 1)
+        rows.append(
+            fmt_row(
+                f"fig8_two_stage_{net}", us,
+                f"{net}: best_split_ratio={best_x/w:.2f} tp={best_tp:.2f} "
+                f"in_paper_band={0.5 <= best_x/w <= 0.95}",
+            )
+        )
+    return rows

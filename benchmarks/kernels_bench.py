@@ -1,0 +1,44 @@
+"""Kernel micro-benchmarks: wall time of the jnp reference path (what CPU
+actually runs) for the paper-grid GEMM dims, plus interpret-mode parity of
+the Pallas kernels at one spot-check shape."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.gemm import gemm as pallas_gemm
+
+from .common import fmt_row
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+    for (m, k, n) in [(784, 576, 128), (3136, 288, 64), (196, 1152, 256)]:
+        a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+        f = jax.jit(ref.gemm_ref)
+        f(a, b).block_until_ready()
+        ts = []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            f(a, b).block_until_ready()
+            ts.append(time.perf_counter() - t0)
+        us = float(np.median(ts)) * 1e6
+        gf = 2 * m * k * n / (np.median(ts)) / 1e9
+        rows.append(
+            fmt_row(f"kernel_gemm_jnp_{m}x{k}x{n}", us, f"{gf:.1f}GFLOP/s")
+        )
+    # interpret-mode parity spot check
+    a = jnp.asarray(rng.standard_normal((96, 64)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((64, 80)), jnp.float32)
+    err = float(
+        jnp.abs(
+            pallas_gemm(a, b, block_m=32, block_n=32, block_k=32, interpret=True)
+            - ref.gemm_ref(a, b)
+        ).max()
+    )
+    rows.append(fmt_row("kernel_gemm_pallas_parity", 0.0, f"max_err={err:.2e}"))
+    return rows

@@ -1,0 +1,59 @@
+"""§Roofline report: reads dryrun_results.jsonl and prints the per
+(arch x shape x mesh) roofline table with HLO and analytic terms."""
+import glob
+import json
+import os
+
+from .common import fmt_row
+
+_DIR = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _latest_results():
+    cands = sorted(
+        glob.glob(os.path.join(_DIR, "dryrun_results*.jsonl")),
+        key=os.path.getmtime,
+    )
+    return cands[-1] if cands else None
+
+
+def load_records(path=None):
+    path = path or _latest_results()
+    recs = []
+    if not path or not os.path.exists(path):
+        return recs
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                recs.append(json.loads(line))
+    return recs
+
+
+def run():
+    rows = []
+    recs = load_records()
+    if not recs:
+        return [fmt_row("roofline_report", 0.0, "no dryrun_results.jsonl — run repro.launch.dryrun --all first")]
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    errors = [r for r in recs if r.get("status") == "error"]
+    for r in ok:
+        t = r["roofline"]
+        mesh = "2x16x16" if r["multi_pod"] else "16x16"
+        rows.append(
+            fmt_row(
+                f"roofline_{r['arch']}_{r['shape']}_{mesh}",
+                max(t["compute_s"], t["memory_s"], t["collective_s"]) * 1e6,
+                f"compute={t['compute_s']*1e3:.2f}ms memory={t['memory_s']*1e3:.2f}ms "
+                f"collective={t['collective_s']*1e3:.2f}ms bottleneck={t['bottleneck']} "
+                f"useful_ratio={t['useful_ratio']:.2f} mem/chip={r['memory']['per_chip_gb']:.1f}GB",
+            )
+        )
+    rows.append(
+        fmt_row(
+            "roofline_summary", 0.0,
+            f"ok={len(ok)} skipped={len(skipped)} errors={len(errors)}",
+        )
+    )
+    return rows

@@ -1,0 +1,79 @@
+"""Table III: per-layer GEMM time prediction error of the Eq. 5 model.
+
+Faithful variant: the regression is fitted on REAL measured GEMM wall
+times on this host (XLA CPU, cached in core/calibration.json) and scored
+by 5-fold cross-validation plus a live-measured set of actual CNN layer
+GEMM dims.  The paper reports 13.2% (Big) / 11.4% (Small) against its ARM
+board; the Small cluster here is a speed-scaled simulation (DESIGN.md §2),
+so its error equals the Big error by construction and is reported once.
+"""
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import GemmDims, SingleCoreModel
+from repro.core.calibration import _CACHE, calibrate, measure_grid
+
+from .common import cnn_descriptors, fmt_row
+
+_LAYER_CACHE = os.path.join(os.path.dirname(__file__), "_table3_layers.json")
+
+
+def _real_grid_samples():
+    calibrate(use_cache=True)  # ensures calibration.json exists
+    with open(_CACHE) as f:
+        data = json.load(f)["samples"]
+    return [(GemmDims(**s["dims"]), s["t"]) for s in data]
+
+
+def _cnn_layer_samples(max_layers=8):
+    if os.path.exists(_LAYER_CACHE):
+        with open(_LAYER_CACHE) as f:
+            return [(GemmDims(**d), t) for d, t in json.load(f)]
+    from repro.core.calibration import _time_gemm
+
+    out = []
+    for net in ("mobilenet", "squeezenet", "alexnet"):
+        descs = [d for d in cnn_descriptors(net) if d.kind == "conv"][:max_layers]
+        for d in descs:
+            g = d.gemm_dims()
+            if g.N * g.K * g.M > 2e9:  # keep the live sweep quick
+                continue
+            out.append((g, _time_gemm(g.N, g.K, g.M)))
+    with open(_LAYER_CACHE, "w") as f:
+        json.dump([({"N": g.N, "K": g.K, "M": g.M}, t) for g, t in out], f)
+    return out
+
+
+def run():
+    t0 = time.perf_counter()
+    samples = _real_grid_samples()
+    rng = np.random.default_rng(0)
+    idx = rng.permutation(len(samples))
+    folds = np.array_split(idx, 5)
+    errs = []
+    for i in range(5):
+        test = [samples[j] for j in folds[i]]
+        train = [samples[j] for j in idx if j not in set(folds[i])]
+        model = SingleCoreModel.fit(train)
+        errs.append(model.mean_abs_pct_error(test))
+    cv_err = float(np.mean(errs))
+
+    model = SingleCoreModel.fit(samples)
+    layer_samples = _cnn_layer_samples()
+    layer_err = model.mean_abs_pct_error(layer_samples) if layer_samples else float("nan")
+    us = (time.perf_counter() - t0) * 1e6
+    return [
+        fmt_row(
+            "table3_prediction_error_cv", us,
+            f"5-fold CV on {len(samples)} real host GEMMs: {cv_err:.1f}% "
+            f"(paper board: 13.2%/11.4%) within_band={cv_err < 25}",
+        ),
+        fmt_row(
+            "table3_prediction_error_cnn_layers", 0.0,
+            f"{len(layer_samples)} real CNN-layer GEMMs: {layer_err:.1f}% "
+            f"(grid-fitted Eq.5 model, live measured)",
+        ),
+    ]

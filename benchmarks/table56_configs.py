@@ -1,0 +1,43 @@
+"""Tables V/VI: the DSE's chosen pipeline configuration + layer allocation
+from PREDICTED layer times vs from 'measured' (ground-truth) times.  Paper:
+same pipeline configs in most cases, allocations differ slightly (~4%)."""
+import time
+
+from repro.core import pipe_it_search
+
+from .common import (
+    PLAT,
+    cnn_descriptors,
+    fmt_row,
+    gt_time_matrix,
+    predicted_time_matrix,
+)
+
+NETS = ("alexnet", "googlenet", "mobilenet", "resnet50", "squeezenet")
+
+
+def run():
+    rows = []
+    for net in NETS:
+        descs = cnn_descriptors(net)
+        w = len(descs)
+        T_pred = predicted_time_matrix(descs)
+        T_gt = gt_time_matrix(descs)
+        t0 = time.perf_counter()
+        plan_pred = pipe_it_search(w, PLAT, T_pred, mode="merge")
+        plan_meas = pipe_it_search(w, PLAT, T_gt, mode="merge")
+        us = (time.perf_counter() - t0) * 1e6 / 2
+        same_cfg = plan_pred.pipeline.stages == plan_meas.pipeline.stages
+        # evaluate both allocations on ground truth
+        tp_pred = plan_pred.throughput(T_gt)
+        tp_meas = plan_meas.throughput(T_gt)
+        loss = 1 - tp_pred / tp_meas
+        rows.append(
+            fmt_row(
+                f"table56_configs_{net}", us,
+                f"{net}: predicted[{plan_pred.notation()}] "
+                f"measured[{plan_meas.notation()}] same_pipeline={same_cfg} "
+                f"pred_tp_loss={loss*100:.1f}% (paper: ~4%)",
+            )
+        )
+    return rows

@@ -1,0 +1,26 @@
+"""Beyond-paper: Pipe-it's DSE over a TPU pod's model axis for every
+assigned architecture — pipeline stage groups vs pure 16-way tensor
+parallelism (analytic roofline T-matrix; see core/tpu_pipeit.py)."""
+import time
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.core.tpu_pipeit import plan_stages
+
+from .common import fmt_row
+
+
+def run():
+    rows = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        t0 = time.perf_counter()
+        parts = []
+        for shape_name in ("decode_32k", "train_4k"):
+            plan, stats = plan_stages(cfg, SHAPES[shape_name])
+            nota = plan.pipeline.notation()
+            if len(nota) > 24:
+                nota = nota[:21] + "..."
+            parts.append(f"{shape_name}:[{nota}]{stats['gain']*100:+.0f}%")
+        us = (time.perf_counter() - t0) * 1e6 / 2
+        rows.append(fmt_row(f"tpu_pipeit_{arch}", us, " ".join(parts)))
+    return rows

@@ -1,0 +1,35 @@
+"""Beyond-paper: Pipe-it's DSE applied to a TPU pod's model axis.
+
+For each assigned architecture x serving shape, partitions the layers into
+pipeline stage GROUPS of chips (stage capability = group size; stage
+boundary = one ICI activation hop) using the paper's Algorithms 1-3 with an
+analytic roofline cost model, and compares against pure 16-way tensor
+parallelism (the "kernel-level" strategy).
+
+    PYTHONPATH=src python examples/pipeit_tpu.py
+"""
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.core.tpu_pipeit import plan_stages
+
+
+def main():
+    print(f"{'arch':22s} {'shape':12s} {'pipeline (chip groups)':32s} {'gain vs TP16':>12s}")
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape_name in ("decode_32k", "prefill_32k", "train_4k"):
+            plan, stats = plan_stages(cfg, SHAPES[shape_name])
+            nota = plan.pipeline.notation()
+            if len(nota) > 30:
+                nota = nota[:27] + "..."
+            print(f"{arch:22s} {shape_name:12s} {nota:32s} {stats['gain']*100:+11.1f}%")
+    print(
+        "\nReading: positive gain = the paper's layer-level pipelining beats"
+        "\npure tensor parallelism on the model axis, because per-layer"
+        "\nall-reduces (the CCI analogue) grow with group size while small"
+        "\ngroups keep collectives local — the same trade the paper found"
+        "\nbetween big.LITTLE clusters."
+    )
+
+
+if __name__ == "__main__":
+    main()

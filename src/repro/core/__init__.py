@@ -1,0 +1,47 @@
+"""Pipe-it core: the paper's contribution (descriptors, perf model, DSE).
+
+Wang et al., "High-Throughput CNN Inference on Embedded ARM big.LITTLE
+Multi-Core Processors", IEEE TCAD 2019.
+"""
+from .descriptors import ConvDescriptor, GemmDims, conv_descriptor, fc_descriptor
+from .dse import exhaustive_search, find_split, merge_stage, pipe_it_search, work_flow
+from .perfmodel import LayerTimePredictor, MultiCoreModel, SingleCoreModel
+from .pipeline import (
+    Pipeline,
+    PipelinePlan,
+    contiguous_allocation,
+    design_space_size,
+    enumerate_pipelines,
+    num_pipelines,
+    stage_time,
+)
+from .platform import CoreType, HeteroPlatform, StageConfig, hikey970
+from .simulator import SimResult, simulate
+
+__all__ = [
+    "ConvDescriptor",
+    "GemmDims",
+    "conv_descriptor",
+    "fc_descriptor",
+    "exhaustive_search",
+    "find_split",
+    "merge_stage",
+    "pipe_it_search",
+    "work_flow",
+    "LayerTimePredictor",
+    "MultiCoreModel",
+    "SingleCoreModel",
+    "Pipeline",
+    "PipelinePlan",
+    "contiguous_allocation",
+    "design_space_size",
+    "enumerate_pipelines",
+    "num_pipelines",
+    "stage_time",
+    "CoreType",
+    "HeteroPlatform",
+    "StageConfig",
+    "hikey970",
+    "SimResult",
+    "simulate",
+]

@@ -1,0 +1,257 @@
+"""Design-space exploration — the paper's Algorithms 1-3, implemented
+faithfully.
+
+* :func:`find_split`  — Algorithm 1: water-flow split of a contiguous layer
+  range between two adjacent stages.
+* :func:`work_flow`   — Algorithm 2: iterate find_split over all adjacent
+  stage pairs until the allocation stabilises.
+* :func:`merge_stage` — Algorithm 3: start from one-core-per-stage and merge
+  adjacent same-type stages while Eq. 14 predicts an improvement.
+
+The paper's pseudocode for Algorithm 3 "break"s a cluster loop on the first
+unhelpful merge; its worked examples (ResNet50 -> B4-s2-s2, MobileNet ->
+B2-B2-s3-s1) show that after an unhelpful merge the search *advances to the
+next adjacent pair* within the cluster rather than abandoning it — we
+implement that semantics (stay on a pair after a successful merge so a
+grown stage can keep absorbing, advance past an unhelpful one).
+
+An exhaustive search over (pipeline x contiguous split) is provided for
+small instances; tests use it to bound the heuristic's optimality gap.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .pipeline import (
+    Allocation,
+    Pipeline,
+    PipelinePlan,
+    TimeMatrix,
+    contiguous_allocation,
+    enumerate_pipelines,
+    stage_time,
+)
+from .platform import HeteroPlatform, StageConfig
+
+
+def find_split(
+    layers: Sequence[int],
+    T: TimeMatrix,
+    stage_a: StageConfig,
+    stage_b: StageConfig,
+    rule: str = "paper",
+) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    """Algorithm 1: split ``layers`` (ordered) between adjacent stages.
+
+    All work starts on the faster stage ``stage_a``; layers flow one at a
+    time from the tail of ``stage_a`` to the head of ``stage_b``.
+
+    rule="paper":  move while the donor stage would remain the bottleneck
+      (the paper's exact condition — conservative: it can stop one move
+      short of the best split).
+    rule="minmax": move while the move strictly reduces
+      max(t_left, t_right).  Because t_left is monotonically decreasing
+      and t_right monotonically increasing in the number of moved layers,
+      the max is unimodal and this greedy rule finds the *optimal*
+      contiguous two-way split.  Beyond-paper improvement (DESIGN.md §2).
+    """
+    left = list(layers)
+    right: List[int] = []
+    t_left = stage_time(T, left, stage_a)
+    t_right = 0.0
+    while left:
+        lj = left[-1]
+        t_left_new = t_left - T[lj][stage_a]
+        t_right_new = t_right + T[lj][stage_b]
+        if rule == "paper":
+            helpful = t_left_new > t_right_new
+        elif rule == "minmax":
+            helpful = max(t_left_new, t_right_new) < max(t_left, t_right)
+        else:
+            raise ValueError(f"unknown rule {rule!r}")
+        if helpful:  # move of l_j is helpful
+            left.pop()
+            right.insert(0, lj)
+            t_left, t_right = t_left_new, t_right_new
+        else:  # further flow of workload will not be helpful
+            break
+    return tuple(left), tuple(right)
+
+
+def work_flow(
+    pipeline: Pipeline,
+    layers: Sequence[int],
+    T: TimeMatrix,
+    max_rounds: int = 100,
+    rule: str = "paper",
+) -> Allocation:
+    """Algorithm 2: iterative pairwise rebalancing until a fixed point."""
+    p = pipeline.p
+    alloc: List[Tuple[int, ...]] = [tuple(layers)] + [()] * (p - 1)
+    old: Optional[List[Tuple[int, ...]]] = None
+    rounds = 0
+    while alloc != old and rounds < max_rounds:
+        old = list(alloc)
+        for i in range(p - 1):
+            pool = tuple(alloc[i]) + tuple(alloc[i + 1])
+            li, lj = find_split(
+                pool, T, pipeline.stages[i], pipeline.stages[i + 1], rule=rule
+            )
+            alloc[i], alloc[i + 1] = li, lj
+        rounds += 1
+    return tuple(alloc)
+
+
+def _plan(pipeline: Pipeline, alloc: Allocation) -> PipelinePlan:
+    return PipelinePlan(pipeline=pipeline, allocation=alloc)
+
+
+def merge_stage(
+    layers: Sequence[int],
+    platform: HeteroPlatform,
+    T: TimeMatrix,
+) -> PipelinePlan:
+    """Algorithm 3: stage-configuration search by merging.
+
+    Starts from an ``(H_B + H_s)``-stage pipeline of single cores (Big
+    stages first), rebalances with work_flow, then greedily merges adjacent
+    same-type stages while Eq. 14 holds.
+    """
+    stages: List[StageConfig] = []
+    for ct in platform.core_types:
+        stages.extend([(ct.name, 1)] * ct.count)
+    pipeline = Pipeline(stages=tuple(stages))
+    alloc = work_flow(pipeline, layers, T)
+
+    def eq14_merge_helpful(i: int) -> bool:
+        """Eq. 14: merged stage beats the slower of the two originals."""
+        (ta, ca), (tb, cb) = pipeline.stages[i], pipeline.stages[i + 1]
+        merged: StageConfig = (ta, ca + cb)
+        t_merged = stage_time(T, alloc[i] + alloc[i + 1], merged)
+        t_i = stage_time(T, alloc[i], pipeline.stages[i])
+        t_j = stage_time(T, alloc[i + 1], pipeline.stages[i + 1])
+        return t_merged < max(t_i, t_j)
+
+    i = 0
+    while i < pipeline.p - 1:
+        (ta, _), (tb, _) = pipeline.stages[i], pipeline.stages[i + 1]
+        if ta != tb:  # cluster boundary: never mix core types in a stage
+            i += 1
+            continue
+        if eq14_merge_helpful(i):
+            new_stages = list(pipeline.stages)
+            merged = (ta, new_stages[i][1] + new_stages[i + 1][1])
+            new_stages[i : i + 2] = [merged]
+            pipeline = Pipeline(stages=tuple(new_stages))
+            alloc = work_flow(pipeline, layers, T)
+            # stay at i: the grown stage may keep absorbing its neighbour
+        else:
+            i += 1
+
+    # Drop stages that received no layers (their cores stay idle; the
+    # paper's final configurations never contain empty stages).
+    kept = [
+        (st, al)
+        for st, al in zip(pipeline.stages, alloc)
+        if al
+    ]
+    pipeline = Pipeline(stages=tuple(st for st, _ in kept))
+    alloc = tuple(al for _, al in kept)
+    return _plan(pipeline, alloc)
+
+
+def pipeline_sweep(
+    n_layers: int,
+    platform: HeteroPlatform,
+    T: TimeMatrix,
+) -> PipelinePlan:
+    """Beyond-paper mode: the number of distinct *pipelines* is small
+    (Eq. 1 gives 64 on the 4+4 platform) — the exponential blow-up is in
+    the split points, which ``work_flow`` resolves heuristically.  Running
+    work_flow on every pipeline is cheap and never worse than Algorithm 3
+    (recorded in DESIGN.md §2 / EXPERIMENTS.md §Perf as an improvement)."""
+    layers = list(range(n_layers))
+    best: Optional[PipelinePlan] = None
+    best_tp = -1.0
+    h = platform.total_cores()
+    for p in range(1, h + 1):
+        pipes = (
+            enumerate_pipelines(platform, p)
+            if p > 1
+            else [Pipeline(stages=((ct.name, ct.count),)) for ct in platform.core_types]
+        )
+        for pipeline in pipes:
+            alloc = work_flow(pipeline, layers, T, rule="minmax")
+            kept = [(st, al) for st, al in zip(pipeline.stages, alloc) if al]
+            plan = _plan(
+                Pipeline(stages=tuple(st for st, _ in kept)),
+                tuple(al for _, al in kept),
+            )
+            tp = plan.throughput(T)
+            if tp > best_tp:
+                best, best_tp = plan, tp
+    assert best is not None
+    return best
+
+
+def pipe_it_search(
+    n_layers: int,
+    platform: HeteroPlatform,
+    T: TimeMatrix,
+    mode: str = "merge",
+) -> PipelinePlan:
+    """The Pipe-it DSE entry point (paper §VI).
+
+    mode="merge"  — the paper's Algorithm 3 (faithful).
+    mode="sweep"  — beyond-paper work_flow-over-all-pipelines.
+    mode="best"   — run both, return the higher-throughput plan.
+    """
+    if mode == "merge":
+        return merge_stage(list(range(n_layers)), platform, T)
+    if mode == "sweep":
+        return pipeline_sweep(n_layers, platform, T)
+    if mode == "best":
+        a = merge_stage(list(range(n_layers)), platform, T)
+        b = pipeline_sweep(n_layers, platform, T)
+        return a if a.throughput(T) >= b.throughput(T) else b
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# Exhaustive reference search (small instances only; used by tests/benches)
+# ---------------------------------------------------------------------------
+
+def exhaustive_search(
+    n_layers: int,
+    platform: HeteroPlatform,
+    T: TimeMatrix,
+    max_stages: Optional[int] = None,
+) -> PipelinePlan:
+    """Brute-force over every pipeline (Eq. 1) and every contiguous split
+    (Eq. 2).  Exponential; only for validating the heuristic."""
+    best: Optional[PipelinePlan] = None
+    best_tp = -1.0
+    h = platform.total_cores()
+    top = min(max_stages or h, h, n_layers)
+    for p in range(1, top + 1):
+        if p == 1:
+            # Degenerate single-stage "pipelines": best homogeneous cluster.
+            for ct in platform.core_types:
+                plan = _plan(
+                    Pipeline(stages=((ct.name, ct.count),)),
+                    (tuple(range(n_layers)),),
+                )
+                tp = plan.throughput(T)
+                if tp > best_tp:
+                    best, best_tp = plan, tp
+            continue
+        for pipeline in enumerate_pipelines(platform, p):
+            for cuts in itertools.combinations(range(1, n_layers), p - 1):
+                alloc = contiguous_allocation(cuts, n_layers, p)
+                plan = _plan(pipeline, alloc)
+                tp = plan.throughput(T)
+                if tp > best_tp:
+                    best, best_tp = plan, tp
+    assert best is not None
+    return best

@@ -1,0 +1,82 @@
+"""Heterogeneous platform models.
+
+Two concrete platforms drive the Pipe-it algorithms:
+
+* :class:`BigLittlePlatform` — the paper's Hikey-970-like big.LITTLE
+  multi-core.  Because this container has no asymmetric silicon, the Small
+  cluster is a *calibrated simulation*: a speed factor relative to the Big
+  core (default 0.36 ~ A53@1.8GHz / A73@2.4GHz incl. IPC gap) applied to
+  the measured/regressed Big-core layer times.  This is recorded in
+  DESIGN.md §2 as a hardware-adaptation assumption.
+
+* :class:`TpuStagePlatform` — the TPU-pod adaptation: "core types" are
+  sub-mesh group sizes; see ``core/tpu_pipeit.py``.
+
+The platform exposes the *stage configuration vocabulary*: every
+``(core_type, core_count)`` tuple a pipeline stage may use, plus the
+cross-"cluster" boundary transfer cost model (the CCI / ICI analogue).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+StageConfig = Tuple[str, int]  # (core_type, core_count), e.g. ("B", 3)
+
+
+@dataclasses.dataclass(frozen=True)
+class CoreType:
+    name: str
+    count: int
+    speed: float  # relative single-core throughput vs. reference core (B=1.0)
+    l2_bytes: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class HeteroPlatform:
+    """A heterogeneous multi-core: ordered core types, fastest first."""
+
+    name: str
+    core_types: Tuple[CoreType, ...]
+    # Boundary transfer model: seconds per byte moved across the cluster
+    # boundary (CCI on big.LITTLE, ICI hop for TPU stage groups), plus a
+    # fixed per-image handoff latency.
+    boundary_bytes_per_s: float = 5.0e9
+    boundary_latency_s: float = 20e-6
+
+    def stage_vocabulary(self) -> List[StageConfig]:
+        """All (H_B + H_s) possible stage configurations (paper §VI-A)."""
+        vocab: List[StageConfig] = []
+        for ct in self.core_types:
+            vocab.extend((ct.name, n) for n in range(1, ct.count + 1))
+        return vocab
+
+    def counts(self) -> Dict[str, int]:
+        return {ct.name: ct.count for ct in self.core_types}
+
+    def speed(self, core_type: str) -> float:
+        for ct in self.core_types:
+            if ct.name == core_type:
+                return ct.speed
+        raise KeyError(core_type)
+
+    def total_cores(self) -> int:
+        return sum(ct.count for ct in self.core_types)
+
+    def transfer_time(self, nbytes: int) -> float:
+        return self.boundary_latency_s + nbytes / self.boundary_bytes_per_s
+
+
+def hikey970(small_speed: float = 0.36) -> HeteroPlatform:
+    """The paper's evaluation platform: 4x A73 'B' + 4x A53 's' (Fig. 1)."""
+    return HeteroPlatform(
+        name="hikey970",
+        core_types=(
+            CoreType("B", 4, 1.0, l2_bytes=2 * 1024 * 1024),
+            CoreType("s", 4, small_speed, l2_bytes=1 * 1024 * 1024),
+        ),
+        # CCI-500 effective ~5 GB/s; the paper attributes the kernel-level
+        # collapse (Fig. 3) to cross-cluster conflict-miss latency.
+        boundary_bytes_per_s=5.0e9,
+        boundary_latency_s=20e-6,
+    )

@@ -1,0 +1,157 @@
+"""Pipe-it on TPU pods: the paper's scheduling algorithms applied to the
+model axis of a pod.
+
+Mapping (DESIGN.md §2): a pipeline stage is a GROUP of chips on the model
+axis; intra-stage parallelism is tensor-parallel sharding (the paper's
+kernel-level split), and the stage boundary moves one activation tensor
+over ICI (the CCI analogue).  "Heterogeneity" is group size: a 8-chip
+stage processes a layer faster than a 2-chip stage, but with concave
+returns — every TP layer pays an all-reduce whose cost grows with group
+size, exactly the concavity (paper Fig. 11) that makes merge_stage's
+Eq. 14 stop rule meaningful.
+
+The per-layer cost model plays the role of Eq. 5/8: analytic roofline
+terms per layer on an n-chip group,
+
+    t_l(n) = max(flops_l / (n * PEAK), bytes_l / (n * HBM))
+             + ar_bytes(n) / ICI_BW          (0 when n == 1)
+
+with ar_bytes the ring all-reduce traffic of the layer's TP collectives.
+The same ``pipe_it_search`` then picks stage groups + layer ranges.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+from ..configs.shapes import InputShape
+from ..models.config import ModelConfig
+from .dse import pipe_it_search
+from .pipeline import PipelinePlan, TimeMatrix
+from .platform import CoreType, HeteroPlatform, StageConfig
+
+PEAK = 197e12  # bf16 flop/s per chip
+HBM = 819e9  # bytes/s
+ICI = 50e9  # bytes/s per link
+HANDOFF_S = 2e-6  # stage-boundary activation send latency
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuLayerCost:
+    name: str
+    flops_per_token: float  # forward flops per token
+    weight_bytes: float  # parameter bytes the layer streams per step
+    act_bytes_per_token: float  # residual-stream activation bytes
+    n_collectives: int  # TP all-reduces per layer (attn out, ffn out, ...)
+
+
+def layer_costs(cfg: ModelConfig, seq_len: int) -> List[TpuLayerCost]:
+    """Analytic per-layer costs from the config (the Eq. 3-4 analogue:
+    statically-available descriptors -> cost terms)."""
+    d = cfg.d_model
+    dh = cfg.resolved_head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    out: List[TpuLayerCost] = []
+    act = d * 2  # bf16 residual stream per token
+
+    for li in range(cfg.n_layers):
+        attn_p = d * (h + 2 * kv + h) * dh  # wq, wk, wv, wo
+        window = cfg.sliding_window or seq_len
+        if cfg.full_attn_layers and li in cfg.full_attn_layers:
+            window = seq_len
+        score = 2 * min(window, seq_len) * h * dh  # qk^T + pv per token
+        if cfg.block_kind == "xlstm":
+            # mLSTM: qkv + gates + out projections; state update O(N*P)
+            p = d * d * 5
+            fl = 2 * p + 2 * dh * (dh + 1) * cfg.n_heads
+            out.append(TpuLayerCost(f"l{li}", fl, p * 2, act, 2))
+            continue
+        if cfg.block_kind == "hymba":
+            mamba_p = d * 2 * cfg.d_inner + cfg.d_inner * (d + 2 * cfg.ssm_state)
+            ffn_p = d * cfg.d_ff * (3 if cfg.glu else 2)
+            p = attn_p + mamba_p + ffn_p
+            fl = 2 * p + score + 2 * cfg.d_inner * cfg.ssm_state
+            out.append(TpuLayerCost(f"l{li}", fl, p * 2, act, 3))
+            continue
+        if cfg.n_experts and li >= cfg.first_dense_layers:
+            expert_p = cfg.d_model * cfg.d_ff * (3 if cfg.glu else 2)
+            active = expert_p * cfg.top_k + expert_p * cfg.n_shared_experts
+            weights = expert_p * cfg.n_experts + expert_p * cfg.n_shared_experts
+            p_flops = attn_p + active
+            p_bytes = (attn_p + weights) * 2
+            fl = 2 * p_flops + score
+            out.append(TpuLayerCost(f"l{li}", fl, p_bytes, act, 3))
+            continue
+        ffn_p = d * cfg.d_ff * (3 if cfg.glu else 2)
+        p = attn_p + ffn_p
+        fl = 2 * p + score
+        out.append(TpuLayerCost(f"l{li}", fl, p * 2, act, 2))
+    return out
+
+
+def tpu_platform(n_chips: int = 16) -> HeteroPlatform:
+    """One homogeneous chip type; stage capability = group size."""
+    return HeteroPlatform(
+        name=f"tpu-pod-axis-{n_chips}",
+        core_types=(CoreType("c", n_chips, 1.0),),
+        boundary_bytes_per_s=ICI,
+        boundary_latency_s=HANDOFF_S,
+    )
+
+
+def stage_time(cost: TpuLayerCost, n: int, tokens_per_step: float) -> float:
+    compute = cost.flops_per_token * tokens_per_step / (n * PEAK)
+    memory = cost.weight_bytes / (n * HBM)
+    t = max(compute, memory)
+    if n > 1:
+        # ring all-reduce of the layer output: 2 (n-1)/n * bytes over ICI
+        ar = cost.n_collectives * 2 * (n - 1) / n * (
+            cost.act_bytes_per_token * tokens_per_step
+        )
+        t += ar / ICI
+    return t
+
+
+def time_matrix(
+    costs: Sequence[TpuLayerCost], n_chips: int, tokens_per_step: float
+) -> TimeMatrix:
+    return [
+        {("c", n): stage_time(c, n, tokens_per_step) for n in range(1, n_chips + 1)}
+        for c in costs
+    ]
+
+
+def plan_stages(
+    cfg: ModelConfig,
+    shape: InputShape,
+    n_chips: int = 16,
+    mode: str = "best",
+) -> Tuple[PipelinePlan, Dict[str, float]]:
+    """Run the paper's DSE over the pod's model axis.
+
+    tokens_per_step: decode -> batch tokens; train/prefill -> microbatch
+    tokens in flight per pipeline step (batch * seq / data-parallel — the
+    data axis is orthogonal and already sharded, so per model-axis group
+    it is batch/data * seq tokens)."""
+    if shape.kind == "decode":
+        tokens = shape.global_batch / 16  # per data shard
+    else:
+        tokens = shape.global_batch * shape.seq_len / 16
+    costs = layer_costs(cfg, shape.seq_len)
+    T = time_matrix(costs, n_chips, tokens)
+    plat = tpu_platform(n_chips)
+    plan = pipe_it_search(cfg.n_layers, plat, T, mode=mode)
+    tp_pipe = plan.throughput(T)
+
+    # baseline: pure tensor-parallel over all chips (the "kernel-level"
+    # strategy — one stage, every layer split 16 ways)
+    from .pipeline import Pipeline, PipelinePlan as PP
+
+    base = PP(Pipeline((("c", n_chips),)), (tuple(range(cfg.n_layers)),))
+    tp_base = base.throughput(T)
+    return plan, {
+        "pipeline_steps_per_s": tp_pipe,
+        "tp_baseline_steps_per_s": tp_base,
+        "gain": tp_pipe / tp_base - 1,
+        "tokens_per_step": tokens,
+    }

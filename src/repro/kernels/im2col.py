@@ -1,0 +1,61 @@
+"""Pallas im2col kernel — the ARM-CL Im2Col stage of conv-as-GEMM (§V-A).
+
+TPU adaptation: rather than a scalar gather loop (the CPU formulation),
+each grid step (oh, fi) loads ONE padded input row into VMEM and emits the
+strided window slices for every output column at once, so the inner loop
+is vectorised over the lane dimension.
+
+Grid: (OH, FH).  Input block: one padded row [1, Wp, C] at row
+``oh*stride + fi`` (expressible because the block height is 1, making the
+block index equal the element row).  Output block: [1, OW, 1, FW, C].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _im2col_kernel(x_ref, o_ref, *, fw: int, stride: int, ow: int):
+    row = x_ref[0]  # [Wp, C]
+    cols = []
+    for j in range(fw):
+        # strided slice: columns j, j+stride, ..., j+stride*(ow-1)
+        cols.append(
+            jax.lax.slice(row, (j, 0), (j + stride * (ow - 1) + 1, row.shape[1]), (stride, 1))
+        )
+    patch = jnp.stack(cols, axis=1)  # [OW, FW, C]
+    o_ref[0, :, 0, :, :] = patch.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("fh", "fw", "stride", "pad", "interpret")
+)
+def im2col(
+    x: jnp.ndarray,  # [H, W, C]
+    fh: int,
+    fw: int,
+    stride: int = 1,
+    pad: int = 0,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """[H,W,C] -> [OH*OW, FH*FW*C] image matrix (paper Fig. 10)."""
+    h, w, c = x.shape
+    oh = (h - fh + 2 * pad) // stride + 1
+    ow = (w - fw + 2 * pad) // stride + 1
+    xp = jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+    hp, wp, _ = xp.shape
+
+    out = pl.pallas_call(
+        functools.partial(_im2col_kernel, fw=fw, stride=stride, ow=ow),
+        grid=(oh, fh),
+        in_specs=[
+            pl.BlockSpec((1, wp, c), lambda i, fi, s=stride: (i * s + fi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, ow, 1, fw, c), lambda i, fi: (i, 0, fi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((oh, ow, fh, fw, c), x.dtype),
+        interpret=interpret,
+    )(xp)
+    return out.reshape(oh * ow, fh * fw * c)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth a kernel must reproduce; kernel
+tests sweep shapes/dtypes and assert_allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """f32-accumulating matmul oracle: [M,K] @ [K,N] -> [M,N]."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def im2col_ref(x: jnp.ndarray, fh: int, fw: int, stride: int, pad: int) -> jnp.ndarray:
+    """[H,W,C] -> [OH*OW, FH*FW*C], patch features ordered (fh, fw, c)."""
+    h, w, c = x.shape
+    xp = jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+    oh = (h - fh + 2 * pad) // stride + 1
+    ow = (w - fw + 2 * pad) // stride + 1
+    rows = []
+    for i in range(fh):
+        for j in range(fw):
+            rows.append(
+                jax.lax.slice(
+                    xp, (i, j, 0), (i + stride * (oh - 1) + 1, j + stride * (ow - 1) + 1, c),
+                    (stride, stride, 1),
+                )
+            )
+    # [OH, OW, FH*FW, C] -> [OH*OW, FH*FW*C]
+    stacked = jnp.stack(rows, axis=2)
+    return stacked.reshape(oh * ow, fh * fw * c)
+
+
+def flash_decode_ref(
+    q: jnp.ndarray,  # [Hq, D]
+    k: jnp.ndarray,  # [S, D]
+    v: jnp.ndarray,  # [S, D]
+    length: int | jnp.ndarray,  # valid prefix of the cache
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Single-kv-head decode attention oracle: softmax(q k^T / sqrt(D)) v
+    over the first ``length`` cache slots.  Returns [Hq, D]."""
+    s, d = k.shape
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(q.dtype)
+    logits = (q.astype(jnp.float32) @ k.T.astype(jnp.float32)) * scale  # [Hq, S]
+    mask = jnp.arange(s) < length
+    logits = jnp.where(mask[None, :], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    return (w @ v.astype(jnp.float32)).astype(q.dtype)

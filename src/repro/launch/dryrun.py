@@ -1,0 +1,195 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede every other import (jax locks device count on first init).
+# The 512 placeholder host devices exist ONLY for this dry-run entry point;
+# tests and benchmarks see the real single CPU device.
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape), lower + compile the appropriate
+step (train_step / prefill_step / serve_step) against ShapeDtypeStruct
+inputs on the production mesh — single-pod (16, 16) = 256 chips and
+multi-pod (2, 16, 16) = 512 chips — then record memory_analysis,
+cost_analysis and the collective schedule for EXPERIMENTS.md §Dry-run /
+§Roofline.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m \
+        --shape train_4k [--multi-pod] [--out results.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from ..configs import SHAPES, get_config
+    from ..models import MeshCtx, abstract_params
+    from ..optim import adamw_init
+    from ..roofline.analysis import analyze_compiled, count_params, model_flops
+    from .mesh import batch_axes, make_production_mesh
+    from .shardings import (
+        batch_specs,
+        cache_specs,
+        opt_specs,
+        param_specs,
+        to_named,
+    )
+    from .specs import input_specs
+    from .steps import make_prefill_step, make_serve_step, make_train_step
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.supports_long_context():
+        return {
+            "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+            "status": "skipped",
+            "reason": "pure full attention — long_500k requires sub-quadratic decode (DESIGN.md §4)",
+        }
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    bax = batch_axes(mesh)
+    n_batch_shards = 1
+    for a in bax:
+        n_batch_shards *= mesh.shape[a]
+    ctx = MeshCtx(
+        mesh=mesh, batch_axes=bax,
+        shard_batch=shape.global_batch % n_batch_shards == 0,
+    )
+
+    params_abs = abstract_params(cfg)
+    pspecs = param_specs(cfg, params_abs, mesh)
+    specs = input_specs(cfg, shape)
+    t0 = time.time()
+
+    with mesh:
+        if shape.kind == "train":
+            step = make_train_step(cfg, ctx)
+            opt_abs = jax.eval_shape(adamw_init, params_abs)
+            ospecs = opt_specs(cfg, opt_abs, pspecs)
+            bspecs = batch_specs(cfg, specs["batch"], mesh)
+            jitted = jax.jit(
+                step,
+                in_shardings=(to_named(pspecs, mesh), to_named(ospecs, mesh),
+                              to_named(bspecs, mesh)),
+                out_shardings=(to_named(pspecs, mesh), to_named(ospecs, mesh), None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_abs, opt_abs, specs["batch"])
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg, ctx)
+            bspecs = batch_specs(cfg, specs["batch"], mesh)
+            cspecs = cache_specs(cfg, specs["caches"], mesh)
+            jitted = jax.jit(
+                step,
+                in_shardings=(to_named(pspecs, mesh), to_named(bspecs, mesh),
+                              to_named(cspecs, mesh)),
+                out_shardings=(None, to_named(cspecs, mesh)),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(params_abs, specs["batch"], specs["caches"])
+        else:  # decode
+            step = make_serve_step(cfg, ctx)
+            cspecs = cache_specs(cfg, specs["caches"], mesh)
+            tspec = batch_specs(cfg, {"tokens": specs["tokens"]}, mesh)["tokens"]
+            jitted = jax.jit(
+                step,
+                in_shardings=(to_named(pspecs, mesh), to_named(cspecs, mesh),
+                              to_named(tspec, mesh), None),
+                out_shardings=(None, to_named(cspecs, mesh)),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(
+                params_abs, specs["caches"], specs["tokens"], specs["pos"]
+            )
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    print(f"[{arch} x {shape_name} | {'2x16x16' if multi_pod else '16x16'}] "
+          f"lower {t_lower:.1f}s compile {t_compile:.1f}s")
+    print(f"  memory_analysis: {mem}")  # proves it fits
+    terms = analyze_compiled(compiled, n_chips)
+    mf = model_flops(cfg, params_abs, shape)
+    terms.finalize(mf)
+    ca = compiled.cost_analysis() or {}
+    print(f"  cost_analysis: flops/chip={terms.flops_per_chip:.3e} "
+          f"bytes/chip={terms.bytes_per_chip:.3e}")
+    print(f"  roofline: compute={terms.compute_s*1e3:.2f}ms "
+          f"memory={terms.memory_s*1e3:.2f}ms "
+          f"collective={terms.collective_s*1e3:.2f}ms "
+          f"-> {terms.bottleneck}-bound; useful_ratio={terms.useful_ratio:.3f}")
+
+    total, active = count_params(get_config(arch), params_abs)
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "multi_pod": multi_pod,
+        "status": "ok",
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "params_total": total,
+        "params_active": active,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes if mem else None,
+            "output_bytes": mem.output_size_in_bytes if mem else None,
+            "temp_bytes": mem.temp_size_in_bytes if mem else None,
+            "alias_bytes": mem.alias_size_in_bytes if mem else None,
+            "per_chip_gb": terms.memory_per_chip_gb,
+        },
+        "roofline": terms.to_dict(),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="every arch x shape x mesh")
+    ap.add_argument("--out", default=None, help="append JSON lines here")
+    args = ap.parse_args()
+
+    from ..configs import ARCHS, SHAPES
+
+    combos = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                combos.append((arch, shape, False))
+                combos.append((arch, shape, True))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required (or --all)")
+        combos = [(args.arch, args.shape, args.multi_pod)]
+
+    failures = 0
+    for arch, shape, mp in combos:
+        try:
+            rec = run_one(arch, shape, mp)
+        except Exception as e:
+            traceback.print_exc()
+            rec = {
+                "arch": arch, "shape": shape, "multi_pod": mp,
+                "status": "error", "error": f"{type(e).__name__}: {e}",
+            }
+            failures += 1
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

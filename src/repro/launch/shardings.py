@@ -1,0 +1,200 @@
+"""Sharding rules: parameter, optimizer, batch and cache PartitionSpecs.
+
+Strategy (DESIGN.md §4): tensor-parallel over "model" on the natural axis
+(heads / ffn hidden / experts / vocab) PLUS FSDP-style sharding of the
+complementary big axis over "data" — XLA inserts the FSDP all-gathers.
+``_shard_if_divisible`` degrades any non-divisible dim to replication
+(e.g. hymba's 25 heads, smollm's 15 heads, kv=8 on a 16-way model axis).
+
+Batch shards over ("pod", "data"); decode caches shard their *sequence*
+dim over "model" (flash-decoding combine in blocks._seqsharded_decode).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+from .mesh import batch_axes
+
+
+def _div(mesh, axis: Optional[str], size: int) -> Optional[str]:
+    """axis if size divides evenly over it, else None (replicate)."""
+    if axis is None or axis not in mesh.axis_names:
+        return None
+    return axis if size % mesh.shape[axis] == 0 else None
+
+
+def _bdiv(mesh, size: int):
+    """batch axes tuple if divisible over their product, else None."""
+    ax = batch_axes(mesh)
+    if not ax:
+        return None
+    total = 1
+    for a in ax:
+        total *= mesh.shape[a]
+    return ax if size % total == 0 else None
+
+
+def _leaf_spec(mesh, cfg: ModelConfig, path: str, leaf) -> P:
+    shape = leaf.shape
+    d = lambda i, ax: _div(mesh, ax, shape[i])
+
+    def spec(*axes):
+        return P(*axes)
+
+    name = path.split("/")[-1]
+    if name == "embed":
+        if cfg.n_codebooks:  # [K, V, D]
+            return spec(None, d(1, "model"), d(2, "data"))
+        return spec(d(0, "model"), d(1, "data"))  # [V, D]
+    if name == "lm_head":
+        return spec(d(0, "data"), d(1, "model"))  # [D, V]
+    if name == "heads":
+        return spec(None, d(1, "data"), d(2, "model"))  # [K, D, V]
+    if name in ("vision_proj", "meta_tokens"):
+        return spec(None, None)
+    if name in ("wq", "wk", "wv"):  # [D, H, dh]
+        return spec(d(0, "data"), d(1, "model"), None)
+    if name == "wo":  # [H, dh, D]
+        return spec(d(0, "model"), None, d(2, "data"))
+    if name in ("bq", "bk", "bv"):  # [H, dh]
+        return spec(d(0, "model"), None)
+    if name in ("w1", "w3"):
+        if len(shape) == 3:  # moe experts [E, D, F]
+            return spec(d(0, "model"), d(1, "data"), None)
+        return spec(d(0, "data"), d(1, "model"))  # [D, F]
+    if name == "w2":
+        if len(shape) == 3:  # [E, F, D]
+            return spec(d(0, "model"), None, d(2, "data"))
+        return spec(d(0, "model"), d(1, "data"))  # [F, D]
+    if name == "b1":  # [F]
+        return spec(d(0, "model"))
+    if name == "router":
+        return spec(None, None)
+    # mamba
+    if name == "w_in":  # [D, 2*dI]
+        return spec(d(0, "data"), d(1, "model"))
+    if name in ("conv_w",):  # [K, dI]
+        return spec(None, d(1, "model"))
+    if name in ("conv_b", "D_skip"):  # [dI]
+        return spec(d(0, "model"))
+    if name in ("B_proj", "C_proj", "dt_proj"):  # [dI, *]
+        return spec(d(0, "model"), None)
+    if name == "w_out":  # [dI or D, D]
+        return spec(d(0, "model"), d(1, "data"))
+    # mlstm: q/k stay model-replicated (their dh is the SSD contraction
+    # dim N — sharding it forces an all-reduce on the big scores tensor);
+    # v's dh is the P dim, which flows through the SSD with no contraction
+    # => clean model-parallel axis (EXPERIMENTS §Perf H2)
+    if name in ("wq_m", "wk_m", "wv_m"):
+        # measured: sharding v's P dim over 'model' pushed reshards into
+        # the SSD inner scans (collective 858 -> 1264 ms — refuted,
+        # EXPERIMENTS §Perf H2 iter 3); mLSTM stays model-replicated
+        return spec(d(0, "data"), None, None)
+    if name == "w_gates":  # [D, 2H]
+        return spec(d(0, "data"), None)
+    if name == "w_o_gate":  # [D, D]
+        return spec(d(0, "data"), d(1, "model"))
+    # slstm wx [D, H, 4dh]: model-REPLICATED on purpose — any model-axis
+    # sharding of the sLSTM propagates into its per-timestep recurrent
+    # einsum and the partitioner reshards every one of the S scan steps
+    # (measured: 29 GB/chip of all-gathers; EXPERIMENTS §Perf H2).  The
+    # sLSTM is a small minority of layers (1 per 8 in xLSTM[7:1]); its
+    # compute runs model-replicated, data-sharded.
+    if name == "wx":
+        return spec(d(0, "data"), None, None)
+    return P()  # norms, small biases, r, gates: replicate
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_specs(cfg: ModelConfig, params_abs, mesh):
+    """PartitionSpec pytree for the parameters (stacked-layer axes get an
+    extra leading None automatically: stacked leaves have one more dim than
+    the per-layer init, detected by rule shape mismatch is avoided by
+    matching on the trailing dims)."""
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        name = ps.split("/")[-1]
+        # leaves under groups/ are stacked with a leading layer axis
+        stacked = "/groups/" in f"/{ps}/" or ps.startswith("groups/")
+        if stacked:
+            sub = jax.ShapeDtypeStruct(leaf.shape[1:], leaf.dtype)
+            inner = _leaf_spec(mesh, cfg, ps, sub)
+            return P(None, *inner)
+        return _leaf_spec(mesh, cfg, ps, leaf)
+
+    return jax.tree_util.tree_map_with_path(one, params_abs)
+
+
+def opt_specs(cfg: ModelConfig, opt_abs, pspecs):
+    """AdamW moments shard like their parameters; step is replicated."""
+    from ..optim.adamw import AdamWState
+
+    return AdamWState(step=P(), m=pspecs, v=pspecs)
+
+
+def batch_specs(cfg: ModelConfig, batch_abs, mesh):
+    def one(path, leaf):
+        b = _bdiv(mesh, leaf.shape[0])
+        return P(b, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(one, batch_abs)
+
+
+def cache_specs(cfg: ModelConfig, cache_abs, mesh):
+    """Decode caches: [L, B, W, kv, dh] -> (None, batch, model(seq), ...).
+
+    Sequence-dim model sharding is what makes 32k/500k caches fit; the
+    decode path combines partial softmax stats across the model axis.
+    """
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        name = ps.split("/")[-1]
+        shape = leaf.shape
+        if name in ("k", "v"):  # [L, B, W, kv, dh]
+            return P(
+                None, _bdiv(mesh, shape[1]), _div(mesh, "model", shape[2]), None, None
+            )
+        if name == "pos":  # [L, W]
+            return P(None, _div(mesh, "model", shape[1]))
+        if name in ("k_scale", "v_scale"):  # [L, B, W, kv]
+            return P(
+                None, _bdiv(mesh, shape[1]), _div(mesh, "model", shape[2]), None
+            )
+        # ssm / xlstm states: shard batch; shard the largest trailing dim
+        # over model when divisible (ties broken toward the LAST dim — for
+        # mLSTM h [L,B,H,N,P] that is P, the contraction-free dim)
+        if leaf.ndim >= 3:
+            rest = [None] * (leaf.ndim - 2)
+            big = max(range(2, leaf.ndim), key=lambda i: (shape[i], i))
+            ax = _div(mesh, "model", shape[big])
+            rest[big - 2] = ax
+            return P(None, _bdiv(mesh, shape[1]), *rest)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(one, cache_abs)
+
+
+def to_named(tree_specs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

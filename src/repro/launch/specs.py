@@ -1,0 +1,76 @@
+"""input_specs: ShapeDtypeStruct stand-ins for every model input, per
+(architecture x input shape) — weak-type-correct, shardable, no device
+allocation (the shannon/kernels pattern).
+
+Modality frontends are STUBS per the assignment: paligemma gets 256
+precomputed 1152-d SigLIP patch embeddings; musicgen gets 4 parallel
+EnCodec codebook token streams.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.shapes import InputShape
+from ..models import init_cache
+from ..models.config import ModelConfig
+from ..models.model import N_META_TOKENS, SIGLIP_DIM
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.n_codebooks:
+        tok = jax.ShapeDtypeStruct((b, s, cfg.n_codebooks), jnp.int32)
+        return {"tokens": tok, "labels": tok}
+    if cfg.n_patches:
+        # image patches are part of the sequence budget: text = s - patches
+        st = s - cfg.n_patches
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, st), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, st), jnp.int32),
+            "patches": jax.ShapeDtypeStruct((b, cfg.n_patches, SIGLIP_DIM), jnp.float32),
+        }
+    if cfg.block_kind == "hymba":
+        # meta tokens are prepended inside the model; keep total = s
+        st = s - N_META_TOKENS
+        tok = jax.ShapeDtypeStruct((b, st), jnp.int32)
+        return {"tokens": tok, "labels": tok}
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return {"tokens": tok, "labels": tok}
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    specs = train_batch_specs(cfg, shape)
+    specs.pop("labels")
+    return specs
+
+
+def cache_abstract(cfg: ModelConfig, shape: InputShape):
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, max_len=shape.seq_len)
+    )
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape):
+    b = shape.global_batch
+    if cfg.n_codebooks:
+        tok = jax.ShapeDtypeStruct((b, 1, cfg.n_codebooks), jnp.int32)
+    else:
+        tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return cache_abstract(cfg, shape), tok, pos
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape):
+    """Returns (kind, specs...) matching the step function for this shape."""
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {
+            "batch": prefill_batch_specs(cfg, shape),
+            "caches": cache_abstract(cfg, shape),
+        }
+    caches, tok, pos = decode_specs(cfg, shape)
+    return {"caches": caches, "tokens": tok, "pos": pos}

@@ -1,0 +1,71 @@
+"""Step builders: train_step / prefill_step / serve_step closures."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import MeshCtx, ModelConfig, loss_fn, prefill, serve_step
+from ..optim import adamw_init, adamw_update, cosine_schedule
+
+
+def make_train_step(cfg: ModelConfig, ctx: Optional[MeshCtx] = None,
+                    base_lr: float = 3e-4, warmup: int = 2000, total: int = 100_000):
+    accum = max(1, cfg.grad_accum)
+
+    def grad_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, ctx=ctx), has_aux=True
+        )(params)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (loss, metrics), grads = grad_of(params, batch)
+        else:
+            # gradient accumulation: scan over microbatches so only one
+            # microbatch's activations are live at a time (the lever that
+            # fits the 100B-scale train shapes; EXPERIMENTS.md §Perf)
+            micro = jax.tree.map(
+                lambda a: a.reshape(accum, a.shape[0] // accum, *a.shape[1:]),
+                batch,
+            )
+
+            def acc_step(carry, mb):
+                g_acc, loss_acc = carry
+                (loss, metrics), g = grad_of(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                return (g_acc, loss_acc + loss), metrics
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss_sum), metrics = jax.lax.scan(
+                acc_step, (g0, jnp.float32(0.0)), micro
+            )
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss_sum / accum
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        lr = cosine_schedule(opt_state.step, base_lr, warmup, total)
+        new_params, new_opt, om = adamw_update(params, grads, opt_state, lr)
+        out_metrics = {"loss": loss, **metrics, **om}
+        return new_params, new_opt, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, ctx: Optional[MeshCtx] = None):
+    def prefill_step(params, batch, caches):
+        return prefill(cfg, params, batch, caches, ctx=ctx)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, ctx: Optional[MeshCtx] = None):
+    def step(params, caches, tokens, pos):
+        return serve_step(cfg, params, caches, tokens, pos, ctx=ctx)
+
+    return step

@@ -1,0 +1,26 @@
+"""Transformer substrate for the assigned architectures."""
+from .blocks import MeshCtx
+from .config import ModelConfig
+from .model import (
+    abstract_params,
+    forward,
+    init_cache,
+    init_params,
+    layer_groups,
+    loss_fn,
+    prefill,
+    serve_step,
+)
+
+__all__ = [
+    "MeshCtx",
+    "ModelConfig",
+    "abstract_params",
+    "forward",
+    "init_cache",
+    "init_params",
+    "layer_groups",
+    "loss_fn",
+    "prefill",
+    "serve_step",
+]

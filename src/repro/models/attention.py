@@ -1,0 +1,280 @@
+"""Attention: GQA + RoPE with blockwise (flash-style) training path and a
+cache-based decode path.
+
+The training path never materializes the [S, S] logits: an outer loop over
+query chunks and an inner online-softmax scan over key chunks keeps the
+live block at [B, Hkv, G, cq, ck].  Masks (causal / sliding-window /
+prefix-LM) are generated per block from position indices, so a *traced*
+per-layer window (hymba) works inside a scanned layer stack.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding.  x: [B, S, H, dh], positions: [B, S] or [S]."""
+    b, s, h, dh = x.shape
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angle = positions[..., None].astype(jnp.float32) * freq  # [B, S, half]
+    cos = jnp.cos(angle)[:, :, None, :]
+    sin = jnp.sin(angle)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _block_mask(qpos, kpos, window, prefix):
+    """[cq, ck] boolean mask from absolute positions.
+
+    window: 0 -> unlimited causal; >0 -> sliding window of that size.
+    prefix: 0 -> none; >0 -> positions < prefix attend bidirectionally.
+    Negative positions are padding.
+    """
+    q = qpos[:, None]
+    k = kpos[None, :]
+    allowed = k <= q
+    allowed &= jnp.where(window > 0, (q - k) < window, True)
+    allowed |= jnp.logical_and(q < prefix, k < prefix)
+    allowed &= (k >= 0) & (q >= 0)
+    return allowed
+
+
+def _mask_penalty(qpos, kpos, window, prefix):
+    """Additive f32 [cq, ck] mask (0 allowed / -1e30 banned).  Kept small
+    and 2-D on purpose: a boolean `where` against batched logits tempts XLA
+    into hoisting broadcast masks for every block pair (observed 64 GB of
+    pred buffers on the dry-run) — an add of a tiny 2-D tensor fuses."""
+    return jnp.where(_block_mask(qpos, kpos, window, prefix), 0.0, _NEG)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _flash(q, k, v, q_positions, k_positions, window, prefix, chunk):
+    out, _ = _flash_fwd_impl(q, k, v, q_positions, k_positions, window, prefix, chunk)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, qp, kp, window, prefix, chunk):
+    """Returns (out [B,nq,cq,Hkv,G,dh-shaped view flattened], lse) — both in
+    blocked layout; callers reshape.  Residual-light: only (out, lse)."""
+    b, nq, cq, hkv, g, dh = q.shape
+    _, nk, ck, _, _ = k.shape
+    scale = dh ** -0.5
+
+    def q_block(args):
+        qi, qpos_i = args  # [B, cq, Hkv, G, dh], [cq]
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            kj, vj, kpos_j = inputs
+            logits = jnp.einsum(
+                "bqkgd,bskd->bkgqs", qi, kj, preferred_element_type=jnp.float32
+            ) * scale  # [B, Hkv, G, cq, ck]
+            logits = logits + _mask_penalty(qpos_i, kpos_j, window, prefix)[None, None, None]
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p, vj.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, cq), _NEG, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, cq, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (k.transpose(1, 0, 2, 3, 4), v.transpose(1, 0, 2, 3, 4), kp),
+        )
+        out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))  # [B, Hkv, G, cq]
+        return out, lse
+
+    outs, lses = jax.lax.map(q_block, (q.transpose(1, 0, 2, 3, 4, 5), qp))
+    # outs [nq, B, Hkv, G, cq, dh]; lses [nq, B, Hkv, G, cq]
+    return outs, lses
+
+
+def _flash_fwd(q, k, v, qp, kp, window, prefix, chunk):
+    outs, lses = _flash_fwd_impl(q, k, v, qp, kp, window, prefix, chunk)
+    return outs, (q, k, v, qp, kp, outs, lses)
+
+
+def _flash_bwd(window, prefix, chunk, res, d_out):
+    """Flash backward: recompute p per block from (q, k, lse); store no
+    attention matrices.  d_out [nq, B, Hkv, G, cq, dh]."""
+    q, k, v, qp, kp, outs, lses = res
+    b, nq, cq, hkv, g, dh = q.shape
+    _, nk, ck, _, _ = k.shape
+    scale = dh ** -0.5
+    # D_i = rowsum(dO * O)  [nq, B, Hkv, G, cq]
+    delta = jnp.sum(d_out.astype(jnp.float32) * outs.astype(jnp.float32), axis=-1)
+
+    kb = k.transpose(1, 0, 2, 3, 4)  # [nk, B, ck, Hkv, dh]
+    vb = v.transpose(1, 0, 2, 3, 4)
+
+    def p_block(qi, lse_i, qpos_i, kj, kpos_j):
+        logits = jnp.einsum(
+            "bqkgd,bskd->bkgqs", qi, kj, preferred_element_type=jnp.float32
+        ) * scale
+        logits = logits + _mask_penalty(qpos_i, kpos_j, window, prefix)[None, None, None]
+        return jnp.exp(logits - lse_i[..., None])  # [B, Hkv, G, cq, ck]
+
+    # ---- dq: map over q blocks, scan over kv blocks
+    def dq_block(args):
+        qi, lse_i, qpos_i, do_i, dl_i = args
+
+        def step(dq_acc, inputs):
+            kj, vj, kpos_j = inputs
+            p = p_block(qi, lse_i, qpos_i, kj, kpos_j)
+            dp = jnp.einsum(
+                "bkgqd,bskd->bkgqs", do_i.astype(jnp.float32), vj.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            ds = p * (dp - dl_i[..., None])  # [B, Hkv, G, cq, ck]
+            dq_acc += jnp.einsum(
+                "bkgqs,bskd->bqkgd", ds, kj.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            ) * scale
+            return dq_acc, None
+
+        dq0 = jnp.zeros((b, cq, hkv, g, dh), jnp.float32)
+        dq_i, _ = jax.lax.scan(step, dq0, (kb, vb, kp))
+        return dq_i
+
+    dq = jax.lax.map(
+        dq_block, (q.transpose(1, 0, 2, 3, 4, 5), lses, qp, d_out, delta)
+    )  # [nq, B, cq, Hkv, G, dh]
+    dq = dq.transpose(1, 0, 2, 3, 4, 5).astype(q.dtype)
+
+    # ---- dk, dv: map over kv blocks, scan over q blocks
+    qb_t = q.transpose(1, 0, 2, 3, 4, 5)  # [nq, B, cq, Hkv, G, dh]
+
+    def dkv_block(args):
+        kj, vj, kpos_j = args
+
+        def step(carry, inputs):
+            dk_acc, dv_acc = carry
+            qi, lse_i, qpos_i, do_i, dl_i = inputs
+            p = p_block(qi, lse_i, qpos_i, kj, kpos_j)
+            dv_acc += jnp.einsum(
+                "bkgqs,bkgqd->bskd", p, do_i.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            dp = jnp.einsum(
+                "bkgqd,bskd->bkgqs", do_i.astype(jnp.float32), vj.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            ds = p * (dp - dl_i[..., None])
+            dk_acc += jnp.einsum(
+                "bkgqs,bqkgd->bskd", ds, qi.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            ) * scale
+            return (dk_acc, dv_acc), None
+
+        z = jnp.zeros((b, ck, hkv, dh), jnp.float32)
+        (dk_j, dv_j), _ = jax.lax.scan(
+            step, (z, z), (qb_t, lses, qp, d_out, delta)
+        )
+        return dk_j, dv_j
+
+    dk, dv = jax.lax.map(dkv_block, (kb, vb, kp))  # [nk, B, ck, Hkv, dh]
+    dk = dk.transpose(1, 0, 2, 3, 4).astype(k.dtype)
+    dv = dv.transpose(1, 0, 2, 3, 4).astype(v.dtype)
+    return dq, dk, dv, None, None
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def blockwise_attention(
+    q: jnp.ndarray,  # [B, Sq, H, dh]
+    k: jnp.ndarray,  # [B, Skv, Hkv, dh]
+    v: jnp.ndarray,  # [B, Skv, Hkv, dh]
+    q_positions: jnp.ndarray,  # [Sq] int32 (negative = padding)
+    k_positions: jnp.ndarray,  # [Skv]
+    window=0,
+    prefix=0,
+    chunk: int = 512,
+) -> jnp.ndarray:
+    """Flash attention (pure JAX, custom_vjp): never materializes [S, S];
+    the backward recomputes attention blocks from (q, k, lse), so the
+    residuals are just qkv + out + lse (production memory behaviour)."""
+    b, sq, h, dh = q.shape
+    _, skv, hkv, _ = k.shape
+    g = h // hkv
+
+    cq = min(chunk, sq)
+    ck = min(chunk, skv)
+    pad_q = (-sq) % cq
+    pad_k = (-skv) % ck
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, (0, pad_q), constant_values=-1)
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        k_positions = jnp.pad(k_positions, (0, pad_k), constant_values=-1)
+    nq, nk = q.shape[1] // cq, k.shape[1] // ck
+
+    qb = q.reshape(b, nq, cq, hkv, g, dh)
+    kb = k.reshape(b, nk, ck, hkv, dh)
+    vb = v.reshape(b, nk, ck, hkv, dh)
+    qp = q_positions.reshape(nq, cq)
+    kp = k_positions.reshape(nk, ck)
+
+    outs = _flash(qb, kb, vb, qp, kp, window, prefix, chunk)
+    # outs [nq, B, Hkv, G, cq, dh] -> [B, S, H, dh]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, nq * cq, h, dh)
+    return out[:, :sq].astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,  # [B, H, dh] (single new token)
+    k_cache: jnp.ndarray,  # [B, S, Hkv, dh]
+    v_cache: jnp.ndarray,  # [B, S, Hkv, dh]
+    length,  # scalar: number of valid cache slots
+    window: int = 0,
+    positions: Optional[jnp.ndarray] = None,  # [B, S] absolute positions
+) -> jnp.ndarray:
+    """Single-step decode attention over a (possibly ring-buffer) cache.
+
+    With ``positions`` given (ring buffers), validity is position-based;
+    otherwise the first ``length`` slots are valid.  Returns [B, H, dh].
+    """
+    b, s, hkv, dh = k_cache.shape
+    h = q.shape[1]
+    g = h // hkv
+    scale = dh ** -0.5
+    qg = q.reshape(b, hkv, g, dh)
+    # no operand upcast (hoisted cache-stack converts; EXPERIMENTS §Perf H3)
+    logits = jnp.einsum(
+        "bkgd,bskd->bkgs", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    if positions is None:
+        idx = jnp.arange(s)
+        valid = idx[None, :] < length
+        if window:
+            valid &= idx[None, :] >= (length - window)
+    else:
+        valid = (positions >= 0) & (positions < length)
+        if window:
+            valid &= positions >= (length - window)
+    logits = jnp.where(valid[:, None, None, :], logits, _NEG)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum(
+        "bkgs,bskd->bkgd", w.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, h, dh).astype(q.dtype)

@@ -1,0 +1,455 @@
+"""CausalLM assembly: embeddings -> scanned layer groups -> head(s).
+
+A model is a sequence of *layer groups*; each group is a homogeneous stack
+of blocks scanned with ``lax.scan`` over stacked parameters (+ optional
+remat).  Groups exist where block structure genuinely changes:
+
+    dense        uniform attention blocks (optionally MoE)
+    hymba        parallel attention+mamba blocks, grouped by window
+    mlstm/slstm  xLSTM pattern (e.g. 7 mLSTM + 1 sLSTM per period)
+
+This grouping is also what the Pipe-it scheduler partitions: a pipeline
+stage boundary is a (group, offset) cut, mirroring the paper's contiguous
+layer allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .blocks import (
+    MeshCtx,
+    dense_block_apply,
+    hymba_block_apply,
+    init_dense_block,
+    init_hymba_block,
+    init_norm,
+    init_xlstm_block,
+    norm_apply,
+    xlstm_block_apply,
+)
+from .config import ModelConfig
+
+SIGLIP_DIM = 1152  # paligemma vision-stub feature width
+N_META_TOKENS = 128  # hymba learnable meta tokens
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    kind: str  # dense | moe | hymba | mlstm | slstm
+    n: int
+    window: int = 0  # 0 = full attention
+    layer_offset: int = 0  # index of first layer in the whole model
+
+
+def layer_groups(cfg: ModelConfig) -> List[GroupSpec]:
+    if cfg.block_kind == "xlstm":
+        period = cfg.slstm_every or cfg.n_layers
+        groups: List[GroupSpec] = []
+        off = 0
+        while off < cfg.n_layers:
+            n_m = min(period - 1, cfg.n_layers - off)
+            if n_m:
+                groups.append(GroupSpec("mlstm", n_m, layer_offset=off))
+                off += n_m
+            if off < cfg.n_layers:
+                groups.append(GroupSpec("slstm", 1, layer_offset=off))
+                off += 1
+        return groups
+    if cfg.block_kind == "hymba":
+        full = set(cfg.full_attn_layers)
+        groups = []
+        start = 0
+        for i in range(1, cfg.n_layers + 1):
+            boundary = i == cfg.n_layers or ((i in full) != (start in full))
+            if boundary:
+                win = 0 if start in full else cfg.sliding_window
+                groups.append(GroupSpec("hymba", i - start, window=win, layer_offset=start))
+                start = i
+        return groups
+    if cfg.block_kind == "moe":
+        groups = []
+        if cfg.first_dense_layers:
+            groups.append(GroupSpec("dense", cfg.first_dense_layers, window=cfg.sliding_window))
+        groups.append(
+            GroupSpec(
+                "moe", cfg.n_layers - cfg.first_dense_layers,
+                window=cfg.sliding_window, layer_offset=cfg.first_dense_layers,
+            )
+        )
+        return groups
+    return [GroupSpec("dense", cfg.n_layers, window=cfg.sliding_window)]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# -------------------------------------------------------------------- init
+def _init_group(rng, cfg: ModelConfig, spec: GroupSpec):
+    dt = _dtype(cfg)
+    rngs = jax.random.split(rng, spec.n)
+    if spec.kind in ("dense", "moe"):
+        fn = lambda r: init_dense_block(r, cfg, dt, moe=(spec.kind == "moe"))
+    elif spec.kind == "hymba":
+        fn = lambda r: init_hymba_block(r, cfg, dt)
+    elif spec.kind == "mlstm":
+        fn = lambda r: init_xlstm_block(r, cfg, dt, "mlstm")
+    elif spec.kind == "slstm":
+        fn = lambda r: init_xlstm_block(r, cfg, dt, "slstm")
+    else:
+        raise ValueError(spec.kind)
+    return jax.vmap(fn)(rngs)
+
+
+def init_params(cfg: ModelConfig, rng: jax.Array) -> Dict[str, Any]:
+    dt = _dtype(cfg)
+    keys = jax.random.split(rng, 8)
+    p: Dict[str, Any] = {}
+    if cfg.n_codebooks:
+        p["embed"] = (
+            jax.random.normal(keys[0], (cfg.n_codebooks, cfg.vocab_size, cfg.d_model), dt)
+            * cfg.d_model ** -0.5
+        )
+    else:
+        p["embed"] = (
+            jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model), dt)
+            * cfg.d_model ** -0.5
+        )
+    if cfg.n_patches:
+        p["vision_proj"] = (
+            jax.random.normal(keys[1], (SIGLIP_DIM, cfg.d_model), dt) * SIGLIP_DIM ** -0.5
+        )
+    if cfg.block_kind == "hymba":
+        p["meta_tokens"] = (
+            jax.random.normal(keys[2], (N_META_TOKENS, cfg.d_model), dt) * 0.02
+        )
+    p["groups"] = []
+    gk = jax.random.split(keys[3], max(len(layer_groups(cfg)), 1))
+    for spec, k in zip(layer_groups(cfg), gk):
+        p["groups"].append(_init_group(k, cfg, spec))
+    p["final_norm"] = init_norm(cfg.d_model, cfg.norm, dt)
+    if cfg.n_codebooks:
+        p["heads"] = (
+            jax.random.normal(keys[4], (cfg.n_codebooks, cfg.d_model, cfg.vocab_size), dt)
+            * cfg.d_model ** -0.5
+        )
+    elif not cfg.tie_embeddings:
+        p["lm_head"] = (
+            jax.random.normal(keys[4], (cfg.d_model, cfg.vocab_size), dt)
+            * cfg.d_model ** -0.5
+        )
+    return p
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    """ShapeDtypeStruct pytree (no allocation) — the dry-run path."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ------------------------------------------------------------------ caches
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> List[Any]:
+    """Per-group decode caches.  max_len includes any prefix tokens."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    dh = cfg.resolved_head_dim
+    caches: List[Any] = []
+
+    def attn_cache(n, window):
+        w = min(max_len, window) if window else max_len
+        kv_dt = jnp.int8 if cfg.kv_quant else dt
+        c = {
+            "k": jnp.zeros((n, batch, w, cfg.n_kv_heads, dh), kv_dt),
+            "v": jnp.zeros((n, batch, w, cfg.n_kv_heads, dh), kv_dt),
+            "pos": jnp.full((n, w), -1, jnp.int32),
+        }
+        if cfg.kv_quant:
+            c["k_scale"] = jnp.zeros((n, batch, w, cfg.n_kv_heads), jnp.float32)
+            c["v_scale"] = jnp.zeros((n, batch, w, cfg.n_kv_heads), jnp.float32)
+        return c
+
+    for spec in layer_groups(cfg):
+        if spec.kind in ("dense", "moe"):
+            caches.append(attn_cache(spec.n, spec.window))
+        elif spec.kind == "hymba":
+            nh = cfg.d_inner // 64
+            caches.append(
+                {
+                    "attn": attn_cache(spec.n, spec.window),
+                    "ssm": (
+                        jnp.zeros((spec.n, batch, cfg.conv_kernel - 1, cfg.d_inner), dt),
+                        jnp.zeros((spec.n, batch, nh, cfg.ssm_state, 64), jnp.float32),
+                    ),
+                }
+            )
+        elif spec.kind == "mlstm":
+            caches.append(
+                (
+                    jnp.zeros((spec.n, batch, cfg.n_heads, dh, dh), jnp.float32),
+                    jnp.zeros((spec.n, batch, cfg.n_heads, dh), jnp.float32),
+                )
+            )
+        elif spec.kind == "slstm":
+            z = jnp.zeros((spec.n, batch, cfg.n_heads, dh), jnp.float32)
+            caches.append((z, z, z, jnp.full_like(z, -1e30)))
+    return caches
+
+
+# ----------------------------------------------------------------- forward
+def _apply_group(cfg, ctx, spec: GroupSpec, gp, x, cache, mode, positions, prefix):
+    raw_block = {
+        "dense": dense_block_apply,
+        "moe": dense_block_apply,
+        "hymba": hymba_block_apply,
+        "mlstm": functools.partial(xlstm_block_apply, kind="mlstm"),
+        "slstm": functools.partial(xlstm_block_apply, kind="slstm"),
+    }[spec.kind]
+    flags = {"window": spec.window, "prefix": prefix}
+    cdt = jnp.dtype(cfg.compute_dtype)
+
+    def block(cfg_, ctx_, lp, x_, c_, mode_, pos_, flags_):
+        # mixed precision: params cast to the compute dtype at use; the
+        # scan carry dtype stays fixed
+        lp = jax.tree.map(
+            lambda a: a.astype(cdt) if jnp.issubdtype(a.dtype, jnp.floating) else a,
+            lp,
+        )
+        x_, c2, aux = raw_block(cfg_, ctx_, lp, x_.astype(cdt), c_, mode_, pos_, flags_)
+        x_ = x_.astype(cdt)
+        if (
+            ctx_ is not None
+            and ctx_.model_parallel
+            and mode_ == "train"
+            and cfg_.act_shard
+        ):
+            # activation sharding: the remat'd layer scan saves the carry
+            # per layer — shard that residual over the model axis so saved
+            # activations cost 1/M per chip (all-gathered on use).
+            # axis 'd': tensor-parallel style (d_model split);
+            # axis 'seq': sequence-parallel style (tokens split) — aligns
+            # with the MoE per-replica token slices so the dispatcher's
+            # input slice and output gather collapse (EXPERIMENTS §Perf H1)
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            m_sz = ctx_.mesh.shape[ctx_.model_axis]
+            if cfg_.act_shard_axis == "seq" and x_.shape[1] % m_sz == 0:
+                spec = P(ctx_.batch_spec(), ctx_.model_axis, None)
+            elif cfg_.d_model % m_sz == 0:
+                spec = P(ctx_.batch_spec(), None, ctx_.model_axis)
+            else:
+                spec = None
+            if spec is not None:
+                x_ = jax.lax.with_sharding_constraint(
+                    x_, NamedSharding(ctx_.mesh, spec)
+                )
+        return x_, c2, aux
+
+    if not cfg.scan_layers or spec.n == 1:
+        aux_total = jnp.float32(0.0)
+        new_caches = []
+        for i in range(spec.n):
+            lp = jax.tree.map(lambda a: a[i], gp)
+            c = jax.tree.map(lambda a: a[i], cache) if cache is not None else None
+            x, c2, aux = block(cfg, ctx, lp, x, c, mode, positions, flags)
+            aux_total += aux
+            new_caches.append(c2)
+        if mode == "train" or new_caches[0] is None:
+            return x, None, aux_total
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+        return x, stacked, aux_total
+
+    def body(carry, inp):
+        x, aux = carry
+        if cache is not None:
+            lp, c = inp
+        else:
+            lp, c = inp, None
+        x, c2, a = block(cfg, ctx, lp, x, c, mode, positions, flags)
+        return (x, aux + a), c2
+
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(body)
+
+    xs = (gp, cache) if cache is not None else gp
+    (x, aux), new_cache = jax.lax.scan(body, (x, jnp.float32(0.0)), xs)
+    return x, new_cache, aux
+
+
+def embed_inputs(
+    cfg: ModelConfig, params, batch: Dict[str, jnp.ndarray], start_pos=0, mode="train"
+):
+    """Assemble the input sequence.  Returns (x [B,S',D], positions [S'],
+    prefix, n_prefix_tokens) where n_prefix_tokens = positions carrying no
+    loss (meta/patch tokens).  In decode mode, prefix assembly (meta /
+    patch tokens) is skipped — those live in the cache from prefill."""
+    tokens = batch["tokens"]
+    dt = jnp.dtype(cfg.compute_dtype)
+    if cfg.n_codebooks:
+        # tokens [B, S, K]: sum the K codebook embeddings (musicgen)
+        embs = [
+            jnp.take(params["embed"][k], tokens[..., k], axis=0)
+            for k in range(cfg.n_codebooks)
+        ]
+        x = sum(embs).astype(dt)
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+
+    n_prefix = 0
+    prefix = 0
+    b = tokens.shape[0]
+    if mode != "decode":
+        if cfg.n_patches and "patches" in batch:
+            patches = batch["patches"].astype(dt) @ params["vision_proj"].astype(dt)
+            x = jnp.concatenate([patches, x], axis=1)
+            n_prefix = patches.shape[1]
+            prefix = n_prefix  # bidirectional over the image prefix
+        if cfg.block_kind == "hymba":
+            meta = jnp.broadcast_to(
+                params["meta_tokens"][None].astype(dt), (b, N_META_TOKENS, cfg.d_model)
+            )
+            x = jnp.concatenate([meta, x], axis=1)
+            n_prefix = N_META_TOKENS
+    positions = start_pos + jnp.arange(x.shape[1], dtype=jnp.int32)
+    return x, positions, prefix, n_prefix
+
+
+def forward(
+    cfg: ModelConfig,
+    params,
+    batch: Dict[str, jnp.ndarray],
+    ctx: Optional[MeshCtx] = None,
+    caches: Optional[List[Any]] = None,
+    mode: str = "train",
+    start_pos=0,
+) -> Tuple[jnp.ndarray, Optional[List[Any]], jnp.ndarray]:
+    """Returns (hidden [B,S',D] post-final-norm, new_caches, aux_loss)."""
+    x, positions, prefix, n_prefix = embed_inputs(cfg, params, batch, start_pos, mode)
+    if ctx is not None and ctx.mesh is not None:
+        # Pin the canonical activation layout: batch over ("pod","data"),
+        # d_model replicated.  Without this the FSDP-sharded embedding
+        # table leaks its 'data'-sharded d axis into every downstream
+        # activation and the batch dim silently replicates (observed as a
+        # global-batch buffer per device on the dry-run).
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        x = jax.lax.with_sharding_constraint(
+            x, NamedSharding(ctx.mesh, P(ctx.batch_spec(), None, None))
+        )
+    aux_total = jnp.float32(0.0)
+    new_caches = []
+    for gi, spec in enumerate(layer_groups(cfg)):
+        gc = caches[gi] if caches is not None else None
+        x, nc, aux = _apply_group(
+            cfg, ctx, spec, params["groups"][gi], x, gc, mode, positions, prefix
+        )
+        new_caches.append(nc)
+        aux_total += aux
+    x = norm_apply(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    if n_prefix and mode != "decode":
+        x = x[:, n_prefix:]
+    return x, (new_caches if mode != "train" else None), aux_total
+
+
+# -------------------------------------------------------------------- loss
+def _head_matrix(cfg: ModelConfig, params):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def chunked_xent(hidden, head_w, labels, chunk: int):
+    """Cross-entropy without materializing [B,S,V]: scan over S chunks.
+
+    labels < 0 are masked.  Returns (loss_sum, token_count).
+    """
+    b, s, d = hidden.shape
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = hidden.shape[1] // c
+    hc = hidden.reshape(b, nc, c, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, c).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def step(carry, inp):
+        # checkpointed: the backward recomputes this chunk's logits instead
+        # of saving [B, c, V] per chunk across the scan
+        loss_sum, count = carry
+        h, l = inp
+        logits = (h.astype(jnp.float32)) @ head_w.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.maximum(l, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = (l >= 0).astype(jnp.float32)
+        loss_sum += ((lse - ll) * mask).sum()
+        count += mask.sum()
+        return (loss_sum, count), None
+
+    (loss_sum, count), _ = jax.lax.scan(
+        step, (jnp.float32(0.0), jnp.float32(0.0)), (hc, lc)
+    )
+    return loss_sum, count
+
+
+def loss_fn(cfg: ModelConfig, params, batch, ctx: Optional[MeshCtx] = None):
+    hidden, _, aux = forward(cfg, params, batch, ctx=ctx, mode="train")
+    labels = batch["labels"]
+    if cfg.n_codebooks:
+        total, count = jnp.float32(0.0), jnp.float32(0.0)
+        for k in range(cfg.n_codebooks):
+            ls, ct = chunked_xent(
+                hidden, params["heads"][k], labels[..., k], cfg.loss_chunk
+            )
+            total += ls
+            count += ct
+    else:
+        total, count = chunked_xent(hidden, _head_matrix(cfg, params), labels, cfg.loss_chunk)
+    loss = total / jnp.maximum(count, 1.0)
+    if cfg.n_experts:
+        loss = loss + cfg.router_aux_weight * aux
+    return loss, {"xent": total / jnp.maximum(count, 1.0), "aux": aux}
+
+
+# -------------------------------------------------------------- serve step
+def serve_step(
+    cfg: ModelConfig,
+    params,
+    caches: List[Any],
+    tokens: jnp.ndarray,  # [B, 1] (or [B, 1, K] for musicgen)
+    pos,  # scalar int32: absolute position of this token
+    ctx: Optional[MeshCtx] = None,
+):
+    """One decode step: returns (logits [B, vocab] (or [B,K,vocab]), caches)."""
+    hidden, new_caches, _ = forward(
+        cfg, params, {"tokens": tokens}, ctx=ctx, caches=caches,
+        mode="decode", start_pos=pos,
+    )
+    h = hidden[:, -1]
+    if cfg.n_codebooks:
+        logits = jnp.einsum("bd,kdv->bkv", h.astype(jnp.float32),
+                            params["heads"].astype(jnp.float32))
+    else:
+        logits = h.astype(jnp.float32) @ _head_matrix(cfg, params).astype(jnp.float32)
+    return logits, new_caches
+
+
+def prefill(
+    cfg: ModelConfig,
+    params,
+    batch: Dict[str, jnp.ndarray],
+    caches: List[Any],
+    ctx: Optional[MeshCtx] = None,
+):
+    """Run the prompt through the model building caches; returns
+    (last_hidden [B,D], caches)."""
+    hidden, new_caches, _ = forward(
+        cfg, params, batch, ctx=ctx, caches=caches, mode="prefill"
+    )
+    return hidden[:, -1], new_caches

@@ -1,0 +1,343 @@
+"""State-space / recurrent sequence mixers: SSD selective scan (Mamba-style
+heads for Hymba), mLSTM and sLSTM (xLSTM).
+
+Hardware adaptation (DESIGN.md §2): GPU Mamba fuses a sequential selective
+scan into one kernel; the TPU-native formulation is the *chunked dual form*
+(Mamba-2 / SSD): within a chunk the recurrence is a small causal matmul
+(MXU), across chunks a short lax.scan carries the [N, P] state.  The same
+machinery implements mLSTM (matrix memory + normalizer via an appended
+ones-channel).  sLSTM has a true hidden-to-hidden recurrence and stays a
+lax.scan over time — that sequential dependency is intrinsic, not a port
+artifact.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SSDState(NamedTuple):
+    h: jnp.ndarray  # [B, H, N, P]
+
+
+def ssd_scan(
+    x: jnp.ndarray,  # [B, S, H, P]
+    log_a: jnp.ndarray,  # [B, S, H]   log decay, <= 0
+    B: jnp.ndarray,  # [B, S, H, N]
+    C: jnp.ndarray,  # [B, S, H, N]
+    chunk: int = 128,
+    h0: Optional[jnp.ndarray] = None,  # [B, H, N, P]
+    normalizer: bool = False,
+    n0: Optional[jnp.ndarray] = None,  # [B, H, N] normalizer state
+) -> Tuple[jnp.ndarray, ...]:
+    """Chunked selective scan:  h_t = a_t h_{t-1} + B_t x_t^T,  y_t = C_t h_t.
+
+    Returns (y [B,S,H,P], h_final [B,H,N,P]); with ``normalizer=True`` also
+    (den [B,S,H], n_final [B,H,N]) — the mLSTM normalizer n_t = a_t n_{t-1}
+    + B_t, den_t = C_t . n_t, computed from the SAME scores/decay (an extra
+    reduction, not a second scan) so the P dimension stays shardable.
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))  # log a = 0 -> a = 1
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))  # B = 0: no input
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = x.shape[1] // q
+
+    xc = x.reshape(b, nc, q, h, p).astype(jnp.float32)
+    lac = log_a.reshape(b, nc, q, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, q, h, n).astype(jnp.float32)
+    Cc = C.reshape(b, nc, q, h, n).astype(jnp.float32)
+
+    L = jnp.cumsum(lac, axis=2)  # [B, NC, Q, H] inclusive cumulative log-decay
+    L_end = L[:, :, -1:, :]  # [B, NC, 1, H]
+
+    # ---- intra-chunk: causal (C_t . B_s) exp(L_t - L_s)
+    scores = jnp.einsum("bcqhn,bcshn->bchqs", Cc, Bc)
+    Lt = L.transpose(0, 1, 3, 2)  # [B, NC, H, Q]
+    # decay[b,c,h,q,s] = exp(L_q - L_s); clamp at 0 so the (masked-out)
+    # anti-causal region cannot produce inf * 0 -> nan
+    decay = jnp.exp(jnp.minimum(Lt[..., :, None] - Lt[..., None, :], 0.0))
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    scores = jnp.where(causal[None, None, None], scores * decay, 0.0)
+    y_intra = jnp.einsum("bchqs,bcshp->bcqhp", scores, xc)
+
+    # ---- chunk summary: H_c = sum_s exp(L_end - L_s) B_s x_s^T
+    w = jnp.exp(L_end - L)  # [B, NC, Q, H]
+    Hc = jnp.einsum("bcqh,bcqhn,bcqhp->bchnp", w, Bc, xc)
+    Ac = jnp.exp(L_end[:, :, 0, :])  # [B, NC, H]
+
+    # ---- inter-chunk state scan
+    h_init = (
+        h0.astype(jnp.float32)
+        if h0 is not None
+        else jnp.zeros((b, h, n, p), jnp.float32)
+    )
+
+    def step(hprev, inputs):
+        a_c, h_c = inputs  # [B, H], [B, H, N, P]
+        hnext = a_c[..., None, None] * hprev + h_c
+        return hnext, hprev  # emit state *before* the chunk
+
+    h_final, h_befores = jax.lax.scan(
+        step, h_init, (Ac.transpose(1, 0, 2), Hc.transpose(1, 0, 2, 3, 4))
+    )
+    h_befores = h_befores.transpose(1, 0, 2, 3, 4)  # [B, NC, H, N, P]
+
+    # ---- inter-chunk contribution: C_t exp(L_t) h_before
+    y_inter = jnp.einsum("bcqh,bcqhn,bchnp->bcqhp", jnp.exp(L), Cc, h_befores)
+
+    y = (y_intra + y_inter).reshape(b, nc * q, h, p)[:, :s]
+    if not normalizer:
+        return y.astype(x.dtype), h_final
+
+    # ---- normalizer channel (P-free): n_t = a_t n_{t-1} + B_t
+    den_intra = scores.sum(-1).transpose(0, 1, 3, 2)  # [B, NC, Q, H]
+    Nc = jnp.einsum("bcqh,bcqhn->bchn", w, Bc)
+    nz_init = (
+        n0.astype(jnp.float32) if n0 is not None else jnp.zeros((b, h, n), jnp.float32)
+    )
+
+    def nstep(nprev, inputs):
+        a_c, n_c = inputs
+        return a_c[..., None] * nprev + n_c, nprev
+
+    n_final, n_befores = jax.lax.scan(
+        nstep, nz_init, (Ac.transpose(1, 0, 2), Nc.transpose(1, 0, 2, 3))
+    )
+    n_befores = n_befores.transpose(1, 0, 2, 3)  # [B, NC, H, N]
+    den_inter = jnp.einsum("bcqh,bcqhn,bchn->bcqh", jnp.exp(L), Cc, n_befores)
+    den = (den_intra + den_inter).reshape(b, nc * q, h)[:, :s]
+    return y.astype(x.dtype), h_final, den, n_final
+
+
+def ssd_decode_step(
+    x: jnp.ndarray,  # [B, H, P]
+    log_a: jnp.ndarray,  # [B, H]
+    B: jnp.ndarray,  # [B, H, N]
+    C: jnp.ndarray,  # [B, H, N]
+    h: jnp.ndarray,  # [B, H, N, P]
+    normalizer: bool = False,
+    nz: Optional[jnp.ndarray] = None,  # [B, H, N]
+) -> Tuple[jnp.ndarray, ...]:
+    """O(1) recurrent step: returns (y [B,H,P], h')
+    (+ (den [B,H], n') with normalizer=True)."""
+    a = jnp.exp(log_a.astype(jnp.float32))[..., None, None]
+    h_new = a * h + B[..., :, None].astype(jnp.float32) * x[..., None, :].astype(jnp.float32)
+    y = jnp.einsum("bhn,bhnp->bhp", C.astype(jnp.float32), h_new)
+    if not normalizer:
+        return y.astype(x.dtype), h_new
+    n_new = a[..., 0] * nz + B.astype(jnp.float32)
+    den = jnp.einsum("bhn,bhn->bh", C.astype(jnp.float32), n_new)
+    return y.astype(x.dtype), h_new, den, n_new
+
+
+# ---------------------------------------------------------------- mamba head
+def mamba_mix(params, u, cfg, state=None, decode=False):
+    """Mamba(-2 style) mixer: in-proj -> causal conv -> SSD -> gate -> out.
+
+    u: [B, S, D] (S=1 with decode=True).  state: (conv_state [B,K-1,dI],
+    ssd h [B,H,N,P]) for decode.  Head size is fixed at 64.
+    """
+    b, s, d = u.shape
+    d_inner = params["w_in"].shape[1] // 2
+    hp = 64
+    nh = d_inner // hp
+    n = params["B_proj"].shape[-1]
+
+    xz = u @ params["w_in"]  # [B, S, 2*dI]
+    x, z = jnp.split(xz, 2, axis=-1)
+
+    # causal depthwise conv along S (kernel K)
+    wconv = params["conv_w"]  # [K, dI]
+    kk = wconv.shape[0]
+    if decode:
+        conv_state = state[0]  # [B, K-1, dI]
+        xfull = jnp.concatenate([conv_state, x], axis=1)  # [B, K, dI]
+        new_conv_state = xfull[:, 1:]
+        x = jnp.einsum("bkd,kd->bd", xfull, wconv)[:, None] + params["conv_b"]
+    else:
+        xpad = jnp.pad(x, ((0, 0), (kk - 1, 0), (0, 0)))
+        x = sum(
+            xpad[:, i : i + s] * wconv[i][None, None] for i in range(kk)
+        ) + params["conv_b"]
+        new_conv_state = xpad[:, s:]  # last K-1 inputs
+    x = jax.nn.silu(x)
+
+    Bm = x @ params["B_proj"]  # [B, S, N]
+    Cm = x @ params["C_proj"]
+    dt = jax.nn.softplus(x @ params["dt_proj"] + params["dt_bias"])  # [B,S,nh]
+    log_a = -dt * jnp.exp(params["A_log"])[None, None]  # [B, S, nh]
+
+    xh = x.reshape(b, s, nh, hp)
+    Bh = jnp.broadcast_to(Bm[:, :, None], (b, s, nh, n))
+    Ch = jnp.broadcast_to(Cm[:, :, None], (b, s, nh, n))
+
+    if decode:
+        h = state[1]
+        y, h_new = ssd_decode_step(
+            xh[:, 0], log_a[:, 0], Bh[:, 0], Ch[:, 0], h
+        )
+        y = y[:, None]  # [B, 1, nh, hp]
+        new_state = (new_conv_state, h_new)
+    else:
+        y, h_new = ssd_scan(xh, log_a, Bh, Ch, chunk=getattr(cfg, "ssd_chunk", 128))
+        new_state = (new_conv_state, h_new)
+
+    y = y.reshape(b, s, d_inner) + x * params["D_skip"][None, None]
+    y = y * jax.nn.silu(z)
+    out = y @ params["w_out"]
+    return out, new_state
+
+
+def init_mamba_params(rng, d_model, d_inner, n_state, conv_kernel, dtype):
+    nh = d_inner // 64
+    k = jax.random.split(rng, 6)
+    s = lambda *sh: 1.0 / (sh[0] ** 0.5)
+    return {
+        "w_in": jax.random.normal(k[0], (d_model, 2 * d_inner), dtype) * s(d_model),
+        "conv_w": jax.random.normal(k[1], (conv_kernel, d_inner), dtype) * 0.5,
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "B_proj": jax.random.normal(k[2], (d_inner, n_state), dtype) * s(d_inner),
+        "C_proj": jax.random.normal(k[3], (d_inner, n_state), dtype) * s(d_inner),
+        "dt_proj": jax.random.normal(k[4], (d_inner, nh), dtype) * s(d_inner),
+        "dt_bias": jnp.zeros((nh,), dtype),
+        "A_log": jnp.zeros((nh,), dtype),
+        "D_skip": jnp.ones((d_inner,), dtype),
+        "w_out": jax.random.normal(k[5], (d_inner, d_model), dtype) * s(d_inner),
+    }
+
+
+# ------------------------------------------------------------------- mLSTM
+def mlstm_mix(params, u, cfg, state=None, decode=False):
+    """mLSTM (xLSTM matrix-memory cell) via the SSD machinery.
+
+    C_t = f_t C_{t-1} + i_t v_t k_t^T ;  n_t = f_t n_{t-1} + i_t k_t ;
+    y_t = (C_t q_t) / max(|n_t . q_t|, 1).
+
+    The normalizer rides the shared scores/decay (ssd_scan normalizer=True)
+    rather than an appended ones-channel, so the value dim P stays a clean
+    power of two and can shard over the mesh model axis (EXPERIMENTS §Perf
+    H2).  Input gate exponential (clamped); forget gate sigmoid.  state =
+    (h [B,H,dh,dh], n [B,H,dh]).
+    """
+    b, s, d = u.shape
+    nh = params["wq_m"].shape[1]
+    dh = params["wq_m"].shape[2]
+
+    q = jnp.einsum("bsd,dhe->bshe", u, params["wq_m"])
+    k = jnp.einsum("bsd,dhe->bshe", u, params["wk_m"]) * (dh ** -0.5)
+    v = jnp.einsum("bsd,dhe->bshe", u, params["wv_m"])
+    gates = u @ params["w_gates"] + params["b_gates"]  # [B, S, 2*nh]
+    f_t, i_t = jnp.split(gates, 2, axis=-1)
+    log_f = jax.nn.log_sigmoid(f_t)  # [B, S, nh]
+    i_gate = jnp.exp(jnp.minimum(i_t, 8.0))
+    B_in = k * i_gate[..., None]
+
+    if decode:
+        h0, nz0 = state
+        num, h_new, den, n_new = ssd_decode_step(
+            v[:, 0], log_f[:, 0], B_in[:, 0], q[:, 0], h0,
+            normalizer=True, nz=nz0,
+        )
+        num, den = num[:, None], den[:, None]
+    else:
+        h0, nz0 = state if state is not None else (None, None)
+        num, h_new, den, n_new = ssd_scan(
+            v, log_f, B_in, q, h0=h0, normalizer=True, n0=nz0
+        )
+
+    out_h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    o_gate = jax.nn.sigmoid(u @ params["w_o_gate"]).reshape(b, s, nh, dh)
+    out = (out_h * o_gate).reshape(b, s, nh * dh)
+    return out @ params["w_out"], (h_new, n_new)
+
+
+def init_mlstm_params(rng, d_model, n_heads, dtype):
+    dh = d_model // n_heads
+    k = jax.random.split(rng, 6)
+    sc = d_model ** -0.5
+    return {
+        # _m suffixes: distinct sharding rules from attention's wq/wk/wv
+        # (launch/shardings.py: wv_m shards dh over 'model', the P dim that
+        # flows through the SSD without contractions)
+        "wq_m": jax.random.normal(k[0], (d_model, n_heads, dh), dtype) * sc,
+        "wk_m": jax.random.normal(k[1], (d_model, n_heads, dh), dtype) * sc,
+        "wv_m": jax.random.normal(k[2], (d_model, n_heads, dh), dtype) * sc,
+        "w_gates": jax.random.normal(k[3], (d_model, 2 * n_heads), dtype) * sc,
+        "b_gates": jnp.concatenate(
+            [jnp.full((n_heads,), 2.0, dtype), jnp.zeros((n_heads,), dtype)]
+        ),
+        "w_o_gate": jax.random.normal(k[4], (d_model, d_model), dtype) * sc,
+        "w_out": jax.random.normal(k[5], (d_model, d_model), dtype) * sc,
+    }
+
+
+# ------------------------------------------------------------------- sLSTM
+def slstm_mix(params, u, cfg, state=None, decode=False):
+    """sLSTM: scalar-memory cell with head-wise block-diagonal recurrence
+    (the truly sequential xLSTM cell) and exponential-gate stabilizer."""
+    b, s, d = u.shape
+    nh, dh = params["r"].shape[0], params["r"].shape[1]
+
+    if state is None:
+        zeros = jnp.zeros((b, nh, dh), jnp.float32)
+        state = (zeros, zeros, zeros, jnp.full((b, nh, dh), -1e30, jnp.float32))
+    c0, n0, h0, m0 = state
+
+    wx = jnp.einsum("bsd,dhe->bshe", u, params["wx"])  # [B,S,nh,4*dh]
+
+    def step(carry, xt):
+        c, n, h, m = carry
+        pre = xt + jnp.einsum("bhe,hef->bhf", h, params["r"]) + params["b"]
+        z_in, i_in, f_in, o_in = jnp.split(pre.astype(jnp.float32), 4, axis=-1)
+        z = jnp.tanh(z_in)
+        o = jax.nn.sigmoid(o_in)
+        m_new = jnp.maximum(f_in + m, i_in)
+        i_g = jnp.exp(i_in - m_new)
+        f_g = jnp.exp(f_in + m - m_new)
+        c_new = f_g * c + i_g * z
+        n_new = f_g * n + i_g
+        h_new = o * (c_new / jnp.maximum(n_new, 1e-6))
+        return (c_new, n_new, h_new, m_new), h_new
+
+    # nested-remat BPTT: outer scan over chunks with a checkpointed chunk
+    # body — residuals are the (c,n,h,m) carry per CHUNK, not per step
+    # (per-step saves measured at tens of GB/chip; EXPERIMENTS §Perf H2)
+    chunk = 128
+    if s % chunk == 0 and s > chunk:
+        wxc = wx.transpose(1, 0, 2, 3).reshape(s // chunk, chunk, b, nh, 4 * dh)
+
+        @jax.checkpoint
+        def chunk_step(carry, xc):
+            carry, ys = jax.lax.scan(step, carry, xc)
+            return carry, ys
+
+        (c, n, h, m), ys = jax.lax.scan(chunk_step, (c0, n0, h0, m0), wxc)
+        ys = ys.reshape(s, b, nh, dh)
+    else:
+        (c, n, h, m), ys = jax.lax.scan(step, (c0, n0, h0, m0), wx.transpose(1, 0, 2, 3))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, nh * dh).astype(u.dtype)
+    return y @ params["w_out_slstm"], (c, n, h, m)
+
+
+def init_slstm_params(rng, d_model, n_heads, dtype):
+    dh = d_model // n_heads
+    k = jax.random.split(rng, 3)
+    sc = d_model ** -0.5
+    return {
+        "wx": jax.random.normal(k[0], (d_model, n_heads, 4 * dh), dtype) * sc,
+        "r": jax.random.normal(k[1], (n_heads, dh, 4 * dh), dtype) * (dh ** -0.5),
+        "b": jnp.zeros((n_heads, 4 * dh), dtype),
+        # distinct leaf name: sLSTM outputs stay model-replicated (see
+        # launch/shardings.py — model-sharding anything touching the
+        # recurrent scan causes per-timestep reshards)
+        "w_out_slstm": jax.random.normal(k[2], (d_model, d_model), dtype) * sc,
+    }

@@ -1,0 +1,3 @@
+from .analysis import RooflineTerms, analyze_compiled, collective_bytes, count_params
+
+__all__ = ["RooflineTerms", "analyze_compiled", "collective_bytes", "count_params"]

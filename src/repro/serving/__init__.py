@@ -1,0 +1,3 @@
+from .engine import PipelinedGraphEngine, SingleStageEngine
+
+__all__ = ["PipelinedGraphEngine", "SingleStageEngine"]

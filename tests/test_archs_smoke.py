@@ -1,0 +1,148 @@
+"""Per-architecture smoke tests: REDUCED variant (2 layers, d_model<=512,
+<=4 experts) of the same family — one forward/train step on CPU with shape
+and no-NaN assertions, plus decode consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import (
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill,
+    serve_step,
+)
+from repro.models.model import _head_matrix
+from repro.optim import adamw_init, adamw_update
+
+
+def _batch(cfg, rng, b=2, s=32):
+    shape = (b, s, cfg.n_codebooks) if cfg.n_codebooks else (b, s)
+    tokens = jax.random.randint(rng, shape, 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.n_patches:
+        batch["patches"] = jax.random.normal(rng, (b, cfg.n_patches, 1152))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_config_limits(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.d_model <= 512
+    assert cfg.n_layers <= 8
+    assert cfg.n_experts <= 4
+    assert cfg.vocab_size <= 512
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_no_nans(arch):
+    cfg = get_config(arch).reduced()
+    rng = jax.random.PRNGKey(0)
+    params = init_params(cfg, rng)
+    batch = _batch(cfg, rng)
+    hidden, _, aux = jax.jit(lambda p, b: forward(cfg, p, b, mode="train"))(params, batch)
+    assert hidden.shape == (2, 32, cfg.d_model)
+    assert not bool(jnp.isnan(hidden.astype(jnp.float32)).any())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_decreases_loss(arch):
+    """One real train step on CPU: loss finite, grads flow, params move."""
+    cfg = get_config(arch).reduced()
+    rng = jax.random.PRNGKey(0)
+    params = init_params(cfg, rng)
+    batch = _batch(cfg, rng)
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(params, opt, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True
+        )(params)
+        new_p, new_opt, om = adamw_update(params, grads, opt, lr=1e-3)
+        return new_p, new_opt, loss
+
+    p1, opt, loss1 = step(params, opt, batch)
+    p2 = p1
+    for _ in range(3):  # a few steps: robust to the step-1 Adam transient
+        p2, opt, loss2 = step(p2, opt, batch)
+    assert np.isfinite(float(loss1)) and np.isfinite(float(loss2))
+    assert float(loss2) < float(loss1)  # same batch repeatedly: must improve
+    moved = jax.tree.map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max()),
+        params, p1,
+    )
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_matches_full_forward(arch):
+    """Cache-based decode of the last token == full forward (f32, ample
+    router capacity so capacity-dropping cannot differ between paths)."""
+    cfg = get_config(arch).reduced()
+    cfg = dataclasses.replace(cfg, compute_dtype="float32", capacity_factor=16.0)
+    rng = jax.random.PRNGKey(0)
+    params = init_params(cfg, rng)
+    b, s = 2, 16
+    batch = _batch(cfg, rng, b, s)
+    batch.pop("labels")
+    extra = (cfg.n_patches or 0) + (128 if cfg.block_kind == "hymba" else 0)
+
+    hidden, _, _ = forward(cfg, params, batch, mode="train")
+    if cfg.n_codebooks:
+        want = jnp.einsum(
+            "bd,kdv->bkv", hidden[:, -1].astype(jnp.float32),
+            params["heads"].astype(jnp.float32),
+        )
+    else:
+        want = hidden[:, -1].astype(jnp.float32) @ _head_matrix(cfg, params).astype(jnp.float32)
+
+    caches = init_cache(cfg, b, max_len=s + extra + 4)
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, :-1]
+    _, caches = prefill(cfg, params, pre, caches)
+    got, _ = serve_step(
+        cfg, params, caches, batch["tokens"][:, -1:], jnp.int32(s - 1 + extra)
+    )
+    # int8 KV caches (command-r/moonshot/musicgen) trade ~1% decode error
+    # for half the cache bytes — serving-grade (EXPERIMENTS §Perf H3)
+    tol = 3e-2 if cfg.kv_quant else 2e-3
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=tol, atol=tol
+    )
+
+
+@pytest.mark.parametrize("arch", ["starcoder2-15b", "hymba-1.5b"])
+def test_sliding_window_decode_beyond_window(arch):
+    """Decode past the window: ring-buffer cache must keep working."""
+    cfg = get_config(arch).reduced()
+    cfg = dataclasses.replace(cfg, compute_dtype="float32")
+    assert cfg.sliding_window and cfg.sliding_window <= 64
+    rng = jax.random.PRNGKey(0)
+    params = init_params(cfg, rng)
+    b = 1
+    s = cfg.sliding_window + 8  # prompt longer than the window
+    batch = {"tokens": jax.random.randint(rng, (b, s), 0, cfg.vocab_size)}
+    extra = 128 if cfg.block_kind == "hymba" else 0
+    caches = init_cache(cfg, b, max_len=s + extra + 8)
+    _, caches = prefill(cfg, params, batch, caches)
+    pos = s + extra
+    for i in range(3):
+        tok = jax.random.randint(jax.random.PRNGKey(i), (b, 1), 0, cfg.vocab_size)
+        logits, caches = serve_step(cfg, params, caches, tok, jnp.int32(pos + i))
+        assert not bool(jnp.isnan(logits).any())
+
+
+@pytest.mark.parametrize("arch", ["xlstm-1.3b"])
+def test_xlstm_constant_decode_state(arch):
+    """xLSTM decode state is O(1) in sequence length (long_500k premise)."""
+    cfg = get_config(arch).reduced()
+    c_short = init_cache(cfg, 1, max_len=64)
+    c_long = init_cache(cfg, 1, max_len=4096)
+    sz = lambda c: sum(np.prod(l.shape) for l in jax.tree.leaves(c))
+    assert sz(c_short) == sz(c_long)

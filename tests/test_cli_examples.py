@@ -1,0 +1,54 @@
+"""End-to-end CLI and example smoke tests (subprocesses, tiny scales)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src") + ":" + REPO)
+
+
+def _run(args, timeout=420):
+    res = subprocess.run(
+        args, env=ENV, cwd=REPO, capture_output=True, text=True, timeout=timeout
+    )
+    assert res.returncode == 0, (res.stdout[-1500:], res.stderr[-1500:])
+    return res.stdout
+
+
+def test_train_cli_smoke():
+    out = _run([
+        sys.executable, "-m", "repro.launch.train", "--arch", "smollm-360m",
+        "--reduced", "--steps", "6", "--batch", "2", "--seq", "32",
+        "--log-every", "2",
+    ])
+    assert "step " in out and "loss" in out
+
+
+def test_serve_cli_smoke():
+    out = _run([
+        sys.executable, "-m", "repro.launch.serve", "--arch", "smollm-360m",
+        "--reduced", "--batch", "2", "--prompt-len", "8", "--gen", "4",
+    ])
+    assert "decode:" in out and "tok/s" in out
+
+
+def test_quickstart_example():
+    out = _run([sys.executable, "examples/quickstart.py"])
+    assert "Pipe-it chose:" in out
+    assert "Throughput gain: +" in out
+
+
+def test_train_example_learns():
+    out = _run([sys.executable, "examples/train_smollm.py", "60"])
+    assert "LEARNED" in out
+
+
+def test_pipeit_tpu_example():
+    out = _run([sys.executable, "examples/pipeit_tpu.py"], timeout=560)
+    assert "gain vs TP16" in out
+    # the paper's insight must transfer: every arch gains for train
+    lines = [l for l in out.splitlines() if " train_4k " in l]
+    assert len(lines) == 10
+    assert all("+" in l.split()[-1] for l in lines)

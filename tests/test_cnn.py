@@ -1,0 +1,135 @@
+"""CNN substrate tests: conv-as-GEMM correctness, model structure, stage
+splitting, and quantization."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cnn import MODELS, major_layers
+from repro.cnn.graph import Graph
+from repro.cnn.layers import conv2d, depthwise_conv2d, im2col
+from repro.cnn.models import PAPER_MAJOR_COUNTS
+from repro.cnn.quant import dequantize, qgemm, quantize_tensor
+
+
+# ----------------------------------------------------------- conv-as-GEMM
+def _conv_oracle(x, w, b, stride, pad, groups=1):
+    out = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), [(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    )
+    return out + b if b is not None else out
+
+
+@pytest.mark.parametrize(
+    "hw,cin,k,cout,stride,pad",
+    [(8, 3, 3, 4, 1, 1), (16, 8, 5, 8, 2, 2), (7, 16, 1, 32, 1, 0), (14, 4, 7, 6, 2, 3)],
+)
+def test_im2col_gemm_matches_native_conv(hw, cin, k, cout, stride, pad):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, hw, hw, cin)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, k, cin, cout)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((cout,)), jnp.float32)
+    got = conv2d(x, w, b, stride=stride, pad=pad)
+    want = _conv_oracle(x, w, b, stride, pad)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_grouped_conv_matches_native():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((1, 8, 8, 8)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 4, 6)), jnp.float32)
+    got = conv2d(x, w, None, stride=1, pad=1, groups=2)
+    want = _conv_oracle(x, w, None, 1, 1, groups=2)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@given(
+    st.integers(min_value=3, max_value=12),
+    st.integers(min_value=1, max_value=8),
+    st.sampled_from([1, 3, 5]),
+    st.integers(min_value=1, max_value=2),
+)
+@settings(max_examples=20, deadline=None)
+def test_im2col_patch_count_matches_eq3(hw, cin, k, stride):
+    pad = k // 2
+    x = jnp.ones((1, hw, hw, cin), jnp.float32)
+    cols = im2col(x, k, k, stride, pad)
+    oh = (hw - k + 2 * pad) // stride + 1
+    assert cols.shape == (1, oh * oh, k * k * cin)
+
+
+# -------------------------------------------------------- model structure
+@pytest.mark.parametrize("name", list(MODELS))
+def test_major_node_counts_match_paper_table1(name):
+    g = MODELS[name]()
+    assert len(g.major_nodes()) == PAPER_MAJOR_COUNTS[name]
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_descriptors_consistent_with_shapes(name):
+    g = MODELS[name]()
+    descs = g.descriptors()
+    assert len(descs) == PAPER_MAJOR_COUNTS[name]
+    for d in descs:
+        ow, oh, od = d.output_shape()
+        assert ow >= 1 and oh >= 1 and od >= 1
+        gd = d.gemm_dims()
+        assert gd.N >= 1 and gd.K >= 1 and gd.M >= 1
+
+
+@pytest.mark.parametrize("name", ["squeezenet", "mobilenet"])
+def test_forward_shapes_and_no_nans(name):
+    g = MODELS[name]()
+    params = g.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, *g.input_shape), jnp.float32)
+    y = jax.jit(g.apply)(params, x)
+    assert y.shape == (2, 1000)
+    assert not bool(jnp.isnan(y).any())
+    np.testing.assert_allclose(np.asarray(y.sum(-1)), 1.0, rtol=1e-4)  # softmax
+
+
+def test_stage_split_execution_matches_monolithic():
+    """apply_range over a Pipe-it allocation == one-shot apply.  This is the
+    correctness contract of layer-level pipeline splitting."""
+    g = MODELS["squeezenet"]()
+    params = g.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, *g.input_shape), jnp.float32)
+    whole = g.apply(params, x)
+    n_major = len(g.major_nodes())
+    # a 3-stage split, boundaries inside fire modules on purpose
+    alloc = [tuple(range(0, 7)), tuple(range(7, 17)), tuple(range(17, n_major))]
+    env = {"input": x}
+    for start, stop in g.stage_slices(alloc):
+        env = g.apply_range(params, env, start, stop)
+    (out,) = env.values()
+    np.testing.assert_allclose(np.asarray(out), np.asarray(whole), rtol=1e-5, atol=1e-6)
+
+
+def test_boundary_bytes_decrease_into_network():
+    """Fig. 7's premise: activations shrink with depth (mostly)."""
+    g = MODELS["mobilenet"]()
+    bb = g.boundary_bytes()
+    assert bb[0] > bb[-2]
+
+
+# ------------------------------------------------------------ quantization
+def test_quantize_roundtrip_error_small():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
+    q, s, z = quantize_tensor(w, axis=-1)
+    w2 = dequantize(q, s, z)
+    assert float(jnp.abs(w - w2).max()) < float(s.max()) * 1.01
+
+
+def test_qgemm_close_to_fp32():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((32, 64)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((64, 16)), jnp.float32)
+    qw, s, z = quantize_tensor(w, axis=-1)
+    got = qgemm(a, qw, s, z)
+    want = a @ w
+    rel = float(jnp.abs(got - want).mean() / jnp.abs(want).mean())
+    assert rel < 0.05

@@ -1,0 +1,82 @@
+"""Pallas SSD kernel vs the jnp ssd_scan oracle (interpret mode sweeps)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ssd import ssd
+from repro.models.ssm import ssd_scan
+
+RNG = np.random.default_rng(11)
+
+
+def _inputs(s, h, p, n, dtype=jnp.float32):
+    x = jnp.asarray(RNG.standard_normal((s, h, p)), dtype)
+    la = jnp.asarray(-np.abs(RNG.standard_normal((s, h))) * 0.3, jnp.float32)
+    B = jnp.asarray(RNG.standard_normal((s, h, n)) * 0.4, dtype)
+    C = jnp.asarray(RNG.standard_normal((s, h, n)) * 0.4, dtype)
+    return x, la, B, C
+
+
+@pytest.mark.parametrize(
+    "s,h,p,n,chunk",
+    [(32, 2, 8, 4, 8), (64, 1, 16, 8, 16), (128, 3, 4, 2, 32), (16, 2, 8, 4, 16)],
+)
+def test_ssd_kernel_matches_oracle(s, h, p, n, chunk):
+    x, la, B, C = _inputs(s, h, p, n)
+    h0 = jnp.zeros((h, n, p), jnp.float32)
+    y, hf = ssd(x, la, B, C, h0, chunk=chunk, interpret=True)
+    y_ref, hf_ref = ssd_scan(x[None], la[None], B[None], C[None], chunk=chunk)
+    np.testing.assert_allclose(y, y_ref[0], rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(hf, hf_ref[0], rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_kernel_nonzero_initial_state():
+    s, h, p, n = 32, 2, 8, 4
+    x, la, B, C = _inputs(s, h, p, n)
+    h0 = jnp.asarray(RNG.standard_normal((h, n, p)), jnp.float32)
+    y, hf = ssd(x, la, B, C, h0, chunk=8, interpret=True)
+    y_ref, hf_ref = ssd_scan(x[None], la[None], B[None], C[None], chunk=8, h0=h0[None])
+    np.testing.assert_allclose(y, y_ref[0], rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(hf, hf_ref[0], rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_kernel_vmap_over_batch():
+    s, h, p, n, b = 16, 2, 4, 3, 3
+    xs = jnp.asarray(RNG.standard_normal((b, s, h, p)), jnp.float32)
+    las = jnp.asarray(-np.abs(RNG.standard_normal((b, s, h))) * 0.2, jnp.float32)
+    Bs = jnp.asarray(RNG.standard_normal((b, s, h, n)) * 0.4, jnp.float32)
+    Cs = jnp.asarray(RNG.standard_normal((b, s, h, n)) * 0.4, jnp.float32)
+    h0 = jnp.zeros((b, h, n, p), jnp.float32)
+    y, hf = jax.vmap(lambda *a: ssd(*a, chunk=8, interpret=True))(xs, las, Bs, Cs, h0)
+    y_ref, hf_ref = ssd_scan(xs, las, Bs, Cs, chunk=8)
+    np.testing.assert_allclose(y, y_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(hf, hf_ref, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_kernel_dtypes(dtype):
+    x, la, B, C = _inputs(32, 2, 8, 4, dtype)
+    h0 = jnp.zeros((2, 4, 8), jnp.float32)
+    y, hf = ssd(x, la, B, C, h0, chunk=8, interpret=True)
+    y_ref, hf_ref = ssd_scan(x[None], la[None], B[None], C[None], chunk=8)
+    tol = 2e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        y.astype(jnp.float32), y_ref[0].astype(jnp.float32), rtol=tol, atol=tol
+    )
+
+
+@given(
+    st.sampled_from([16, 32, 48]),
+    st.sampled_from([8, 16]),
+    st.integers(min_value=1, max_value=3),
+)
+@settings(max_examples=8, deadline=None)
+def test_ssd_kernel_chunk_invariance(s, chunk, h):
+    x, la, B, C = _inputs(s, h, 4, 3)
+    h0 = jnp.zeros((h, 3, 4), jnp.float32)
+    y1, f1 = ssd(x, la, B, C, h0, chunk=chunk, interpret=True)
+    y2, f2 = ssd(x, la, B, C, h0, chunk=s, interpret=True)
+    np.testing.assert_allclose(y1, y2, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(f1, f2, rtol=2e-4, atol=2e-4)
