@@ -1,18 +1,43 @@
-"""End-to-end MEASURED pipelined serving on this host: a reduced MobileNet
-image stream through the Pipe-it engine vs single-stage execution.  This is
-the paper's runtime mechanism actually running (stage threads + queues);
-gains on one shared CPU device come from XLA inter-op parallelism."""
-import time
+"""End-to-end MEASURED pipelined serving on this host: a SqueezeNet image
+stream through (1) single-stage kernel-level execution, (2) the original
+per-image pipelined engine on the simulated-board plan, and (3) the
+production PipelineServer (persistent workers + micro-batching + bounded
+queues), auto-planned by the full Pipe-it chain against *this host*:
+calibrated Eq. 5/8 model -> time matrix -> Algorithms 1-3 -> runtime.
 
+This is the paper's methodology transplanted: measure the deployment
+target, fit the model, let the DSE balance the stages (here the "clusters"
+are XLA inter-op thread groups on one shared CPU — DESIGN.md §2), then
+serve continuously.  Gains come from stage overlap plus batched-dispatch
+amortisation.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Pipeline, PipelinePlan
 from repro.cnn import MODELS
-from repro.serving import PipelinedGraphEngine, SingleStageEngine
+from repro.serving import (
+    AutoPlanner,
+    PipelinedGraphEngine,
+    SingleStageEngine,
+    host_platform,
+)
 
-from .common import fmt_row
+from .common import PLAT, fmt_row, predicted_time_matrix
+
+N_IMAGES = 24
+BATCH = 2  # measured sweet spot on this host (EXPERIMENTS.md §Serving)
+REPEATS = 3  # best-of-N: wall-clock throughput on a shared host is noisy
+
+
+def _best_run(engine, images):
+    """Best-of-REPEATS pass; returns the highest-throughput result."""
+    best = None
+    for _ in range(REPEATS):
+        res = engine.run(images)
+        if best is None or res["throughput"] > best["throughput"]:
+            best = res
+    return best
 
 
 def run():
@@ -21,29 +46,45 @@ def run():
     rng = np.random.default_rng(0)
     images = [
         jnp.asarray(rng.standard_normal((1, *graph.input_shape)), jnp.float32)
-        for _ in range(24)
+        for _ in range(N_IMAGES)
     ]
-    w = len(graph.major_nodes())
 
     single = SingleStageEngine(graph, params)
     single.warmup(images[0])
-    res_single = single.run(images)
+    res_single = _best_run(single, images)
 
-    plan = PipelinePlan(
-        Pipeline((("B", 4), ("s", 4))),
-        (tuple(range(0, 2 * w // 3)), tuple(range(2 * w // 3, w))),
+    # the pre-PipelineServer status quo: per-image engine, board-planned
+    board_plan = AutoPlanner(platform=PLAT, mode="best").plan(
+        graph, predicted_time_matrix(graph.descriptors())
     )
-    engine = PipelinedGraphEngine(graph, params, plan)
+    engine = PipelinedGraphEngine(graph, params, board_plan)
     engine.warmup(images[0])
-    res_pipe = engine.run(images)
+    res_pipe = _best_run(engine, images)
 
-    gain = res_pipe["throughput"] / res_single["throughput"] - 1
+    # production path: host-calibrated model -> DSE -> batched server
+    planner = AutoPlanner(platform=host_platform(2), mode="best", source="calibrated")
+    server = planner.build(
+        graph, params, batch_size=BATCH, flush_timeout_s=0.02, queue_depth=4
+    )
+    server.run(images[: 4 * BATCH])  # settle: workers warm, executables cached
+    res_srv = _best_run(server, images)
+    server.stop()
+
+    # outputs must be numerically equal to the kernel-level baseline
+    for a, b in zip(res_single["outputs"], res_srv["outputs"]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+    occ = max(s["occupancy"] for s in res_srv["metrics"]["stages"])
+    p95 = res_srv["metrics"]["e2e_p95_s"]
+    gain = res_srv["throughput"] / res_single["throughput"] - 1
     return [
         fmt_row(
             "serving_pipeline_squeezenet",
-            1e6 / res_pipe["throughput"],
+            1e6 / res_srv["throughput"],
             f"single={res_single['throughput']:.2f}img/s "
             f"pipelined[{res_pipe['stages']}]={res_pipe['throughput']:.2f}img/s "
-            f"gain={gain*100:+.1f}% (one shared CPU device; see DESIGN.md §2)",
+            f"server[{res_srv['stages']},b={BATCH}]={res_srv['throughput']:.2f}img/s "
+            f"gain={gain*100:+.1f}% bottleneck_occ={occ:.2f} e2e_p95={p95*1e3:.0f}ms "
+            f"outputs_equal=yes (one shared CPU device; see DESIGN.md §2)",
         )
     ]

@@ -8,7 +8,8 @@ import time
 import numpy as np
 
 from repro.cnn import MODELS
-from repro.core import pipe_it_search, simulate
+from repro.core import simulate
+from repro.serving import AutoPlanner
 
 from .common import (
     PLAT,
@@ -35,8 +36,8 @@ def run():
 
         t0 = time.perf_counter()
         plans = {
-            "merge": pipe_it_search(w, PLAT, T_pred, mode="merge"),
-            "sweep": pipe_it_search(w, PLAT, T_pred, mode="sweep"),
+            mode: AutoPlanner(platform=PLAT, mode=mode).search(w, T_pred)
+            for mode in ("merge", "sweep")
         }
         us = (time.perf_counter() - t0) * 1e6 / 2
 

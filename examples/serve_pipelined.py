@@ -1,16 +1,18 @@
 """End-to-end driver (the paper's kind: inference serving).
 
-Serves a stream of images through SqueezeNet two ways and MEASURES wall
+Serves a stream of images through SqueezeNet three ways and MEASURES wall
 time on this host:
 
   1. single-stage (kernel-level: whole graph, one jitted fn per image)
-  2. Pipe-it layer-level pipeline (stage threads + queues, the
-     repro.serving engine), stages chosen by the paper's DSE.
+  2. Pipe-it per-image pipeline (the original one-shot engine)
+  3. PipelineServer (production runtime: persistent stage workers +
+     micro-batching + bounded queues), auto-planned via serve() against
+     THIS host — calibrated perf model (Eq. 5/8), DSE (Algorithms 1-3)
+     and runtime in one call.
 
     PYTHONPATH=src:. python examples/serve_pipelined.py [n_images]
 """
 import sys
-import time
 
 import jax
 import jax.numpy as jnp
@@ -18,8 +20,13 @@ import numpy as np
 
 from benchmarks.common import PLAT, predicted_time_matrix
 from repro.cnn import MODELS
-from repro.core import pipe_it_search
-from repro.serving import PipelinedGraphEngine, SingleStageEngine
+from repro.serving import (
+    AutoPlanner,
+    PipelinedGraphEngine,
+    SingleStageEngine,
+    host_platform,
+    serve,
+)
 
 
 def main():
@@ -32,25 +39,45 @@ def main():
         for _ in range(n_images)
     ]
 
-    descs = graph.descriptors()
-    plan = pipe_it_search(len(descs), PLAT, predicted_time_matrix(descs), mode="best")
+    T = predicted_time_matrix(graph.descriptors())
+    plan = AutoPlanner(platform=PLAT, mode="best").plan(graph, T)
     print(f"DSE pipeline: {plan.notation()}")
 
     single = SingleStageEngine(graph, params)
     single.warmup(images[0])
     r1 = single.run(images)
-    print(f"single-stage : {r1['throughput']:6.2f} img/s ({r1['seconds']:.2f}s)")
+    print(f"single-stage  : {r1['throughput']:6.2f} img/s ({r1['seconds']:.2f}s)")
 
     engine = PipelinedGraphEngine(graph, params, plan)
     engine.warmup(images[0])
     r2 = engine.run(images)
-    print(f"pipelined    : {r2['throughput']:6.2f} img/s ({r2['seconds']:.2f}s)  stages={r2['stages']}")
+    print(f"pipelined     : {r2['throughput']:6.2f} img/s ({r2['seconds']:.2f}s)  stages={r2['stages']}")
 
-    # outputs must agree
+    server = serve(
+        graph, params=params, platform=host_platform(2), source="calibrated",
+        batch_size=2, flush_timeout_s=0.02, queue_depth=4,
+    )
+    server.run(images[: min(8, n_images)])  # settle the pipeline
+    r3 = server.run(images)
+    print(
+        f"PipelineServer: {r3['throughput']:6.2f} img/s ({r3['seconds']:.2f}s)  "
+        f"stages={r3['stages']} batch=2 (host-calibrated plan)"
+    )
+    for s in r3["metrics"]["stages"]:
+        print(
+            f"    stage {s['stage']:6s} occ={s['occupancy']:.2f} "
+            f"p50={s['service_p50_s']*1e3:6.1f}ms p95={s['service_p95_s']*1e3:6.1f}ms "
+            f"p99={s['service_p99_s']*1e3:6.1f}ms"
+        )
+    server.stop()
+
+    # outputs must agree across all three execution modes
     for a, b in zip(r1["outputs"], r2["outputs"]):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+    for a, c in zip(r1["outputs"], r3["outputs"]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=1e-4, atol=1e-5)
     print("outputs identical across engines ✓")
-    print(f"gain: {(r2['throughput']/r1['throughput']-1)*100:+.1f}% "
+    print(f"gain vs single-stage: {(r3['throughput']/r1['throughput']-1)*100:+.1f}% "
           f"(single shared CPU device — see DESIGN.md §2)")
 
 

@@ -1,0 +1,59 @@
+"""Cross-version jax compatibility shims (jax 0.4.x through 0.7.x).
+
+The repo targets current jax APIs, but the tier-1 container pins an older
+release.  Two surfaces moved:
+
+* ``jax.sharding.AxisType`` / ``jax.make_mesh(axis_types=...)`` — absent
+  before 0.5; meshes there are implicitly all-Auto, which is what we
+  request anyway.
+* ``jax.shard_map(..., check_vma=...)`` — older releases ship it as
+  ``jax.experimental.shard_map.shard_map(..., check_rep=...)`` (same
+  replication check, earlier name).
+
+Import :func:`make_mesh` and :func:`shard_map` from here instead of using
+the jax namespaces directly.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with all-Auto axis types where supported."""
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def axis_size(axis_name):
+    """Static mesh-axis size inside shard_map, on any jax version.
+
+    ``jax.lax.axis_size`` is recent; on older releases ``psum(1, name)``
+    folds to a concrete Python int at trace time.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+
+else:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=check_vma,
+        )

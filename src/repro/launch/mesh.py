@@ -10,21 +10,18 @@ chips.  Batch is sharded over ("pod", "data"); weights/experts/heads over
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from ..compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1, data: int = 1):
     """Small mesh for CPU tests (model*data must be <= available devices)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"), axis_types=(AxisType.Auto,) * 2
-    )
+    return make_mesh((data, model), ("data", "model"))
 
 
 def batch_axes(mesh) -> tuple:

@@ -1,3 +1,47 @@
-from .engine import PipelinedGraphEngine, SingleStageEngine
+"""Serving runtime for Pipe-it pipelines.
 
-__all__ = ["PipelinedGraphEngine", "SingleStageEngine"]
+Layers of the subsystem (each module's docstring maps itself to the
+paper's equations):
+
+* :mod:`.engine`   — one-shot engines: ``SingleStageEngine`` (kernel-level
+  baseline) and ``PipelinedGraphEngine`` (per-image pipeline, Fig. 2).
+* :mod:`.batching` — fixed-shape micro-batches with size-or-deadline flush.
+* :mod:`.metrics`  — per-stage p50/p95/p99 service times, occupancy
+  (Eq. 10/12 observed live), end-to-end latency.
+* :mod:`.server`   — ``PipelineServer``: persistent stage workers, bounded
+  queues, backpressure.
+* :mod:`.planner`  — ``AutoPlanner`` / ``serve()``: perf model → DSE →
+  running server in one call.
+"""
+from .batching import MicroBatch, gather, split_rows, stack_envs
+from .engine import PipelinedGraphEngine, SingleStageEngine, build_stage_fns
+from .metrics import ServerMetrics, StageMetrics, percentile
+from .planner import AutoPlanner, host_platform, serve
+from .server import (
+    Backpressure,
+    PipelineServer,
+    ServerClosed,
+    ServingError,
+    Ticket,
+)
+
+__all__ = [
+    "AutoPlanner",
+    "Backpressure",
+    "MicroBatch",
+    "PipelineServer",
+    "PipelinedGraphEngine",
+    "ServerClosed",
+    "ServerMetrics",
+    "ServingError",
+    "SingleStageEngine",
+    "StageMetrics",
+    "Ticket",
+    "build_stage_fns",
+    "gather",
+    "host_platform",
+    "percentile",
+    "serve",
+    "split_rows",
+    "stack_envs",
+]

@@ -1,23 +1,34 @@
-"""Pipelined batched-request serving — Pipe-it's runtime, end to end.
+"""One-shot serving engines — the kernel-level baseline and the original
+per-image pipelined engine.
 
 Each pipeline stage owns (a) a contiguous node range of the CNN graph
-(from a Pipe-it layer allocation) and (b) a jit-compiled stage function.
-Stages run on their own host threads connected by bounded queues; an image
+(from a Pipe-it layer allocation, Eq. 10: the stage's service time is the
+sum of its layers' times) and (b) a jit-compiled stage function.  Stages
+run on their own host threads connected by bounded queues; an image
 stream enters stage 0 and classified outputs leave the last stage.  This
 is the one-thread-per-stage analogue of the paper's one-thread-per-core
 ARM-CL scheduler: stage k processes image z while stage k+1 processes
-image z-1 (paper Fig. 2, Layer-level).
+image z-1 (paper Fig. 2, Layer-level), so steady-state throughput is set
+by the slowest stage (Eq. 12).
+
+These engines build their worker threads per ``run()`` call and move one
+image at a time; the production runtime with persistent workers,
+micro-batching and metrics lives in :mod:`repro.serving.server`
+(``PipelineServer``).  ``SingleStageEngine`` stays as the kernel-level
+baseline (whole graph, all cores on one kernel at a time — the execution
+model the paper's Fig. 3 shows collapsing across clusters).
 
 On this container every stage shares one CPU device, so the throughput
 gain over single-stage execution comes from XLA inter-op parallelism
-across host cores — the measured numbers are reported as such.
+across host cores — the measured numbers are reported as such
+(DESIGN.md §2).
 """
 from __future__ import annotations
 
 import queue
 import threading
 import time
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +36,25 @@ import numpy as np
 
 from ..cnn.graph import Graph
 from ..core.pipeline import PipelinePlan
+
+StageFn = Callable[..., Dict[str, jnp.ndarray]]
+
+
+def build_stage_fns(graph: Graph, plan: PipelinePlan) -> List[StageFn]:
+    """One jitted function per pipeline stage.
+
+    Each function executes the stage's contiguous node range against a
+    live-tensor env and returns the pruned env that crosses the stage
+    boundary (the activation transfer the platform's CCI/ICI model
+    charges for).  The functions are shape-polymorphic over the batch
+    dimension — XLA compiles one executable per distinct batch size.
+    """
+    fns: List[StageFn] = []
+    for start, stop in graph.stage_slices(plan.allocation):
+        fns.append(
+            jax.jit(lambda p, env, s=start, e=stop: graph.apply_range(p, env, s, e))
+        )
+    return fns
 
 
 class SingleStageEngine:
@@ -56,13 +86,7 @@ class PipelinedGraphEngine:
         self.params = params
         self.plan = plan
         self.queue_depth = queue_depth
-        self.slices = graph.stage_slices(plan.allocation)
-        self._stage_fns = []
-        for start, stop in self.slices:
-            fn = jax.jit(
-                lambda p, env, s=start, e=stop: graph.apply_range(p, env, s, e)
-            )
-            self._stage_fns.append(fn)
+        self._stage_fns = build_stage_fns(graph, plan)
 
     def warmup(self, x):
         env = {"input": x}

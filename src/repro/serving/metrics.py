@@ -1,0 +1,145 @@
+"""Serving-side observability: per-stage and end-to-end statistics.
+
+The paper evaluates Pipe-it by *sustained throughput* (Eq. 12: the
+steady-state rate is set by the bottleneck stage's service time
+``max_i T_{L_i}^{P_i}``).  To see that equation live in the runtime, every
+pipeline stage records its per-micro-batch service time and busy fraction;
+the server aggregates them into the same quantities the paper reasons
+about:
+
+* stage service-time percentiles (p50/p95/p99) — the empirical
+  ``T_{L_i}^{P_i}`` distribution (Eq. 10 summed over the stage's layers);
+* stage occupancy — busy_time / wall_time; the bottleneck stage of a
+  well-planned pipeline runs near 1.0 while the others wait (Fig. 2,
+  layer-level timeline);
+* end-to-end request latency and completed-images/second throughput.
+
+All times are seconds.  Counters are monotone over the server's whole
+lifetime; latency *samples* live in bounded sliding windows (a
+persistent server must not grow memory with uptime), so the percentiles
+describe recent behaviour — which is what an operator watches anyway.
+``snapshot()`` is safe to call while the server is running (workers only
+append).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Any, Deque, Dict, List, Optional, Sequence
+
+# Sliding-window sizes for latency samples (per stage / end-to-end).
+STAGE_WINDOW = 2048
+E2E_WINDOW = 8192
+
+
+def percentile(samples: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]); 0.0 on empty input."""
+    if not samples:
+        return 0.0
+    xs = sorted(samples)
+    if len(xs) == 1:
+        return xs[0]
+    rank = max(0, min(len(xs) - 1, round(q / 100.0 * (len(xs) - 1))))
+    return xs[int(rank)]
+
+
+@dataclasses.dataclass
+class StageMetrics:
+    """Counters owned by one stage worker (single-writer, lock-free)."""
+
+    name: str
+    batches: int = 0
+    items: int = 0
+    padded_items: int = 0  # batch slots filled with padding, not images
+    busy_s: float = 0.0
+    service_s: Deque[float] = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=STAGE_WINDOW)
+    )
+    started_at: Optional[float] = None
+    stopped_at: Optional[float] = None
+
+    def record(self, service_time: float, n_items: int, n_padded: int = 0) -> None:
+        self.batches += 1
+        self.items += n_items
+        self.padded_items += n_padded
+        self.busy_s += service_time
+        self.service_s.append(service_time)
+
+    def occupancy(self) -> float:
+        """Busy fraction over the worker's active wall time."""
+        if self.started_at is None:
+            return 0.0
+        end = self.stopped_at if self.stopped_at is not None else time.perf_counter()
+        wall = max(end - self.started_at, 1e-12)
+        return min(self.busy_s / wall, 1.0)
+
+    def snapshot(self) -> Dict[str, Any]:
+        lat = list(self.service_s)
+        return {
+            "stage": self.name,
+            "batches": self.batches,
+            "items": self.items,
+            "padded_items": self.padded_items,
+            "occupancy": self.occupancy(),
+            "service_p50_s": percentile(lat, 50),
+            "service_p95_s": percentile(lat, 95),
+            "service_p99_s": percentile(lat, 99),
+            "service_mean_s": (sum(lat) / len(lat)) if lat else 0.0,
+        }
+
+
+class ServerMetrics:
+    """Aggregates stage metrics plus end-to-end request accounting.
+
+    The end-to-end latency of image z includes queueing: in steady state it
+    approaches ``p * max_i T_{L_i}`` (fill latency, Eq. 11's pipeline-fill
+    term) while throughput approaches ``1 / max_i T_{L_i}`` (Eq. 12).
+    """
+
+    def __init__(self, stage_names: List[str]):
+        self.stages = [StageMetrics(name=n) for n in stage_names]
+        self._lock = threading.Lock()
+        self._e2e_s: Deque[float] = collections.deque(maxlen=E2E_WINDOW)
+        self._completed = 0
+        self._first_submit: Optional[float] = None
+        self._last_complete: Optional[float] = None
+
+    # ------------------------------------------------------------- writers
+    def note_submit(self, now: float) -> None:
+        with self._lock:
+            if self._first_submit is None:
+                self._first_submit = now
+
+    def note_complete(self, submitted_at: float, now: float) -> None:
+        with self._lock:
+            self._e2e_s.append(now - submitted_at)
+            self._completed += 1
+            self._last_complete = now
+
+    # ------------------------------------------------------------- readers
+    @property
+    def completed(self) -> int:
+        return self._completed
+
+    def throughput(self) -> float:
+        """Completed images / second over the active window."""
+        with self._lock:
+            if self._first_submit is None or self._last_complete is None:
+                return 0.0
+            window = max(self._last_complete - self._first_submit, 1e-12)
+            return self._completed / window
+
+    def snapshot(self) -> Dict[str, Any]:
+        with self._lock:
+            e2e = list(self._e2e_s)
+            completed = self._completed
+        return {
+            "completed": completed,
+            "throughput_img_s": self.throughput(),
+            "e2e_p50_s": percentile(e2e, 50),
+            "e2e_p95_s": percentile(e2e, 95),
+            "e2e_p99_s": percentile(e2e, 99),
+            "stages": [s.snapshot() for s in self.stages],
+        }

@@ -1,0 +1,400 @@
+"""PipelineServer — persistent, batched, bounded-queue pipelined serving.
+
+This is the production form of the paper's layer-level pipeline (Fig. 2):
+one long-lived worker thread per pipeline stage, connected by bounded
+queues, continuously draining an image stream.  Relative to the one-shot
+:class:`repro.serving.engine.PipelinedGraphEngine` it adds what a serving
+deployment needs:
+
+* **Persistent stage workers** — threads start once and survive across
+  requests, so steady-state throughput (Eq. 12:
+  ``1 / max_i T_{L_i}^{P_i}``) is not diluted by per-call thread spawn
+  and teardown.
+* **Micro-batching** — stage 0 coalesces up to ``batch_size`` images
+  (flushing on ``flush_timeout_s``) into fixed-shape micro-batches
+  (:mod:`repro.serving.batching`); each stage then amortises its per-call
+  overhead (the Eq. 6-8 ``a2/a3`` analogues) across the batch.
+* **Bounded queues with backpressure** — ``submit`` blocks (or raises
+  :class:`Backpressure`) when the pipeline is full, so an open-loop
+  client cannot grow memory without bound; queue depth bounds the
+  pipeline-fill latency term of Eq. 11.
+* **Metrics** — per-stage service-time percentiles and occupancy plus
+  end-to-end latency/throughput (:mod:`repro.serving.metrics`).  The
+  bottleneck stage is visible as the one with occupancy near 1.0, which
+  is exactly the ``argmax_i T_{L_i}^{P_i}`` of Eq. 12.
+
+Construction is usually via :func:`repro.serving.planner.serve`, which
+runs the paper's DSE (Algorithms 1-3) to pick the stage plan first.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Any, Dict, List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..cnn.graph import Graph
+from ..core.pipeline import PipelinePlan
+from .batching import MicroBatch, gather, split_rows, stack_envs
+from .engine import build_stage_fns
+from .metrics import ServerMetrics
+
+_SENTINEL = object()
+
+
+class ServingError(RuntimeError):
+    """Base class for serving-runtime failures."""
+
+
+class Backpressure(ServingError):
+    """The ingress queue stayed full past the submit timeout."""
+
+
+class ServerClosed(ServingError):
+    """submit() after stop(), or after a worker failure closed the server."""
+
+
+class Ticket:
+    """A pending result for one submitted image (a minimal future)."""
+
+    __slots__ = ("submitted_at", "_event", "_value", "_error")
+
+    def __init__(self, submitted_at: float):
+        self.submitted_at = submitted_at
+        self._event = threading.Event()
+        self._value: Optional[jnp.ndarray] = None
+        self._error: Optional[BaseException] = None
+
+    def _resolve(self, value: jnp.ndarray) -> None:
+        self._value = value
+        self._event.set()
+
+    def _fail(self, error: BaseException) -> None:
+        self._error = error
+        self._event.set()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> jnp.ndarray:
+        if not self._event.wait(timeout):
+            raise TimeoutError("result not ready")
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+
+class PipelineServer:
+    """Continuously-running pipelined CNN server for a fixed plan.
+
+    Parameters
+    ----------
+    graph, params : the CNN graph and its parameters.
+    plan : Pipe-it :class:`PipelinePlan` (stage configs + layer allocation).
+    batch_size : micro-batch width; every stage executable is compiled for
+        exactly this leading dimension (partial flushes are zero-padded).
+    flush_timeout_s : max time stage 0 waits to fill a micro-batch after
+        its first image arrives before flushing a partial batch.
+    queue_depth : bound on each inter-stage queue (micro-batches) and, x
+        ``batch_size``, on the ingress queue (images) — the backpressure
+        surface.
+    """
+
+    def __init__(
+        self,
+        graph: Graph,
+        params,
+        plan: PipelinePlan,
+        *,
+        batch_size: int = 4,
+        flush_timeout_s: float = 0.01,
+        queue_depth: int = 2,
+    ):
+        if batch_size < 1:
+            raise ValueError("batch_size must be >= 1")
+        self.graph = graph
+        self.params = params
+        self.plan = plan
+        self.batch_size = batch_size
+        self.flush_timeout_s = flush_timeout_s
+        self.queue_depth = queue_depth
+        self._stage_fns = build_stage_fns(graph, plan)
+        n = len(self._stage_fns)
+        self._ingress: "queue.Queue" = queue.Queue(maxsize=queue_depth * batch_size)
+        self._qs: List["queue.Queue"] = [
+            queue.Queue(maxsize=queue_depth) for _ in range(n)
+        ]  # _qs[i] feeds stage i+1 for i<n-1; _qs[-1] feeds the egress worker
+        stage_names = [
+            f"{i}:{t}{c}" for i, (t, c) in enumerate(plan.pipeline.stages)
+        ]
+        self.metrics = ServerMetrics(stage_names)
+        self._threads: List[threading.Thread] = []
+        self._inflight: set = set()
+        self._lock = threading.Lock()
+        # Serializes ingress puts against stop()'s shutdown sentinel: a
+        # submit that passed the closed-check is guaranteed to land its
+        # image AHEAD of the sentinel, so it gets flushed, not stranded.
+        self._submit_lock = threading.Lock()
+        self._started = False
+        self._closed = False
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> "PipelineServer":
+        with self._lock:
+            if self._started:
+                return self
+            if self._closed:
+                raise ServerClosed("server already stopped")
+            self._started = True
+        n = len(self._stage_fns)
+        self._threads = [
+            threading.Thread(target=self._stage0_worker, name="pipe-stage0", daemon=True)
+        ]
+        for i in range(1, n):
+            self._threads.append(
+                threading.Thread(
+                    target=self._stage_worker, args=(i,), name=f"pipe-stage{i}", daemon=True
+                )
+            )
+        self._threads.append(
+            threading.Thread(target=self._egress_worker, name="pipe-egress", daemon=True)
+        )
+        for t in self._threads:
+            t.start()
+        return self
+
+    def stop(self, timeout: float = 10.0) -> None:
+        """Flush in-flight work, then shut the workers down.
+
+        Idempotent; re-raises the first worker error if the pipeline
+        failed (so a crash can't be silently absorbed by shutdown).
+        """
+        with self._lock:
+            already_closed = self._closed
+            self._closed = True
+            started = self._started
+        if started:
+            if not already_closed:
+                with self._submit_lock:  # after any in-progress submit's put
+                    self._ingress.put(_SENTINEL)
+            for t in self._threads:  # also reaps workers after a failure
+                t.join(timeout=timeout)
+        if self._error is not None:
+            raise self._error
+
+    def __enter__(self) -> "PipelineServer":
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.stop()
+        else:  # don't mask the caller's exception with a flush error
+            try:
+                self.stop()
+            except Exception:
+                pass
+
+    def warmup(self) -> None:
+        """Compile every stage at the padded micro-batch shape."""
+        env = {
+            "input": jnp.zeros((self.batch_size, *self.graph.input_shape), jnp.float32)
+        }
+        for fn in self._stage_fns:
+            env = fn(self.params, env)
+        jax.block_until_ready(env)
+
+    # -------------------------------------------------------------- ingress
+    def submit(
+        self,
+        image: Union[np.ndarray, jnp.ndarray],
+        *,
+        block: bool = True,
+        timeout: Optional[float] = None,
+    ) -> Ticket:
+        """Enqueue one image; returns a :class:`Ticket` future.
+
+        With ``block=False`` (or a ``timeout``) a full pipeline raises
+        :class:`Backpressure` instead of waiting — the caller sheds load.
+        """
+        if not self._started and not self._closed:
+            self.start()
+        x = jnp.asarray(image, jnp.float32)
+        if x.ndim == len(self.graph.input_shape):
+            x = x[None]
+        if x.shape != (1, *self.graph.input_shape):
+            raise ValueError(
+                f"submit() takes ONE image of shape {self.graph.input_shape} "
+                f"(optionally with a leading batch dim of 1), got {x.shape}; "
+                "the server forms micro-batches itself"
+            )
+        now = time.perf_counter()
+        ticket = Ticket(submitted_at=now)
+        with self._submit_lock:
+            with self._lock:
+                if self._closed or self._error is not None:
+                    raise ServerClosed("server is closed") from self._error
+                self._inflight.add(ticket)
+            try:
+                self._ingress.put((ticket, x), block=block, timeout=timeout)
+            except queue.Full:
+                with self._lock:
+                    self._inflight.discard(ticket)
+                raise Backpressure(
+                    f"ingress full ({self._ingress.maxsize} images) — pipeline "
+                    "saturated"
+                ) from None
+        # close the submit()/_fail() race: if a worker failed while we were
+        # enqueueing, nothing will ever consume the item — fail the ticket
+        # now instead of letting the caller block until timeout
+        with self._lock:
+            raced = self._error is not None and ticket in self._inflight
+            if raced:
+                self._inflight.discard(ticket)
+        if raced:
+            ticket._fail(ServingError(f"pipeline worker failed: {self._error!r}"))
+            raise ServerClosed("server is closed") from self._error
+        self.metrics.note_submit(now)
+        return ticket
+
+    def run(self, images: Sequence[Union[np.ndarray, jnp.ndarray]]) -> Dict[str, Any]:
+        """Convenience closed loop: submit a stream, wait for every result.
+
+        Returns the same shape of dict as the one-shot engines, plus a
+        metrics snapshot; callable repeatedly — workers persist between
+        calls (that persistence is the point of this class).
+        """
+        t0 = time.perf_counter()
+        tickets = [self.submit(img) for img in images]
+        outputs = [t.result(timeout=300.0) for t in tickets]
+        dt = time.perf_counter() - t0
+        return {
+            "outputs": outputs,
+            "seconds": dt,
+            "throughput": len(images) / dt,
+            "stages": self.plan.pipeline.notation(),
+            "metrics": self.metrics.snapshot(),
+        }
+
+    # -------------------------------------------------------------- workers
+    def _forward(self, q: "queue.Queue", item: Any) -> bool:
+        """Bounded put that aborts when a peer worker has failed, so no
+        worker can block forever on a queue whose consumer is dead."""
+        while True:
+            if self._error is not None:
+                return False
+            try:
+                q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+
+    def _stage0_worker(self) -> None:
+        fn = self._stage_fns[0]
+        m = self.metrics.stages[0]
+        try:
+            while True:
+                items, eof = gather(
+                    self._ingress, self.batch_size, self.flush_timeout_s, _SENTINEL
+                )
+                if items:
+                    t0 = time.perf_counter()
+                    tickets = tuple(t for t, _ in items)
+                    env = stack_envs(
+                        [{"input": x} for _, x in items], pad_to=self.batch_size
+                    )
+                    out = fn(self.params, env)
+                    # materialize before handing off: the stage boundary is
+                    # where the activation crosses clusters in the paper
+                    jax.block_until_ready(out)
+                    t1 = time.perf_counter()
+                    if m.started_at is None:
+                        m.started_at = t0
+                    m.stopped_at = t1
+                    m.record(t1 - t0, len(items), self.batch_size - len(items))
+                    if not self._forward(
+                        self._qs[0], MicroBatch(tickets, out, valid=len(items))
+                    ):
+                        return
+                if eof:
+                    self._forward(self._qs[0], _SENTINEL)
+                    return
+        except BaseException as e:
+            self._fail(e)
+
+    def _stage_worker(self, si: int) -> None:
+        fn = self._stage_fns[si]
+        m = self.metrics.stages[si]
+        try:
+            while True:
+                item = self._qs[si - 1].get()
+                if item is _SENTINEL:
+                    self._forward(self._qs[si], _SENTINEL)
+                    return
+                t0 = time.perf_counter()
+                out = fn(self.params, item.env)
+                jax.block_until_ready(out)
+                t1 = time.perf_counter()
+                if m.started_at is None:
+                    m.started_at = t0
+                m.stopped_at = t1
+                m.record(t1 - t0, item.valid, item.padded)
+                if not self._forward(
+                    self._qs[si], MicroBatch(item.tickets, out, valid=item.valid)
+                ):
+                    return
+        except BaseException as e:
+            self._fail(e)
+
+    def _egress_worker(self) -> None:
+        try:
+            while True:
+                item = self._qs[-1].get()
+                if item is _SENTINEL:
+                    return
+                (out,) = item.env.values()  # last stage prunes to the output
+                now = time.perf_counter()
+                for ticket, row in zip(item.tickets, split_rows(out, item.valid)):
+                    self.metrics.note_complete(ticket.submitted_at, now)
+                    with self._lock:
+                        self._inflight.discard(ticket)
+                    ticket._resolve(row)
+        except BaseException as e:
+            self._fail(e)
+
+    # -------------------------------------------------------------- failure
+    def _fail(self, error: BaseException) -> None:
+        """A worker died: close the server, fail every pending ticket, and
+        poison every queue so all peer workers exit."""
+        with self._lock:
+            if self._error is None:
+                self._error = error
+            self._closed = True
+            pending = list(self._inflight)
+            self._inflight.clear()
+        reason = ServingError(f"pipeline worker failed: {error!r}")
+        for t in pending:
+            t._fail(reason)
+        # Unblock any submit() stuck on a full ingress queue; the drained
+        # images never reached stage 0, so their tickets fail here (they
+        # were also in _inflight above — Ticket._fail is idempotent).
+        try:
+            while True:
+                item = self._ingress.get_nowait()
+                if item is not _SENTINEL:
+                    item[0]._fail(reason)
+        except queue.Empty:
+            pass
+        # Poison EVERY queue (after the drain, so the ingress sentinel
+        # survives): workers sit in bare get() calls and would otherwise
+        # block forever.  A full inter-stage queue is fine — its consumer
+        # is awake and will observe _error via _forward/gather.
+        for q in (self._ingress, *self._qs):
+            try:
+                q.put_nowait(_SENTINEL)
+            except queue.Full:
+                pass

@@ -116,7 +116,6 @@ def test_mini_dryrun_8_fake_devices(shape_kind):
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, dataclasses
-        from jax.sharding import AxisType
         from repro.configs import get_config
         from repro.configs.shapes import InputShape
         from repro.models import abstract_params, MeshCtx
@@ -130,8 +129,8 @@ def test_mini_dryrun_8_fake_devices(shape_kind):
         cfg = get_config("olmoe-1b-7b").reduced()
         cfg = dataclasses.replace(cfg, d_model=256, n_heads=4, n_kv_heads=4,
                                   head_dim=64, grad_accum=1)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+        from repro.compat import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         ctx = MeshCtx(mesh=mesh, batch_axes=batch_axes(mesh))
         params_abs = abstract_params(cfg)
         pspecs = param_specs(cfg, params_abs, mesh)
