@@ -1,0 +1,66 @@
+"""Online adaptive re-planning under synthetic drift (deterministic).
+
+Scenario: SqueezeNet is planned offline from the Eq. 5/8 *predicted*
+matrix (which already carries the Table-III-style model error vs. the
+ground-truth board of benchmarks/common.py); mid-serve, one cluster
+slows 2x (DVFS / thermal throttling / a co-runner).  Three throughputs
+on the drifted truth:
+
+  static    — the offline plan kept forever (the paper's deployment)
+  adaptive  — the closed loop of serving/adaptive.py: observed stage
+              times -> EWMA calibration -> drift detector -> re-plan ->
+              hot-swap (run here against the discrete-event simulator
+              on a SimulatedClock, so the numbers are exact)
+  oracle    — pipe_it_search re-run directly on the drifted truth
+
+Recovery = adaptive / oracle; the acceptance bar (ISSUE 2) is >= 80%.
+Both drift directions are exercised (Big slows / Small slows).
+"""
+from repro.core import SimulatedClock, pipe_it_search
+from repro.serving import AdaptiveController, SimulatedServing, run_adaptive_loop
+
+from .common import PLAT, cnn_descriptors, fmt_row, gt_time_matrix, predicted_time_matrix
+
+ROUNDS_BEFORE = 3  # calibration settles against the un-drifted board
+ROUNDS_AFTER = 10  # detection + re-plan + post-swap steady state
+DRIFT = 2.0
+
+
+def _scenario(model: str, drift_core: str) -> str:
+    descs = cnn_descriptors(model)
+    n = len(descs)
+    prior = predicted_time_matrix(descs)  # what the offline planner sees
+    truth = gt_time_matrix(descs)  # what the board actually does
+    plan0 = pipe_it_search(n, PLAT, prior, mode="best")
+
+    env = SimulatedServing(truth, PLAT, clock=SimulatedClock())
+    ctrl = AdaptiveController(prior=prior, plan=plan0, platform=PLAT)
+    run_adaptive_loop(ctrl, env, ROUNDS_BEFORE)  # absorb static model error
+
+    env.inject_drift(drift_core, DRIFT)
+    tp_static = env.throughput(plan0)
+    run_adaptive_loop(ctrl, env, ROUNDS_AFTER)
+
+    oracle = pipe_it_search(n, PLAT, env.truth.T, mode="best")
+    tp_oracle = env.throughput(oracle)
+    tp_adaptive = env.throughput(ctrl.plan)
+    recovery = tp_adaptive / tp_oracle
+    detect_round = next(
+        (e.round for e in ctrl.history if e.swapped), None
+    )
+    return fmt_row(
+        f"adaptive_replan_{model}_{drift_core}x{DRIFT:g}",
+        1e6 / tp_adaptive,
+        f"static={tp_static:.2f}img/s adaptive={tp_adaptive:.2f}img/s "
+        f"oracle={tp_oracle:.2f}img/s recovery={recovery * 100:.1f}% "
+        f"swaps={ctrl.swaps} detect_round={detect_round} "
+        f"plan {plan0.pipeline.notation()}->{ctrl.plan.pipeline.notation()} "
+        f"(simulated clock {env.clock.now():.1f}s, deterministic)",
+    )
+
+
+def run():
+    return [
+        _scenario("squeezenet", "B"),
+        _scenario("squeezenet", "s"),
+    ]

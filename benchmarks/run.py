@@ -10,6 +10,7 @@ import traceback
 
 from . import (
     ablation_dse,
+    adaptive_replan,
     eq12_design_space,
     fig3_kernel_level,
     fig5_disproportionate,
@@ -43,6 +44,7 @@ MODULES = [
     table56_configs,
     fig13_quantization,
     serving_pipeline,
+    adaptive_replan,
     kernels_bench,
     tpu_pipeit_bench,
     roofline_report,

@@ -3,8 +3,16 @@
 Wang et al., "High-Throughput CNN Inference on Embedded ARM big.LITTLE
 Multi-Core Processors", IEEE TCAD 2019.
 """
+from .calibration import apply_correction, scale_core_type
 from .descriptors import ConvDescriptor, GemmDims, conv_descriptor, fc_descriptor
-from .dse import exhaustive_search, find_split, merge_stage, pipe_it_search, work_flow
+from .dse import (
+    exhaustive_search,
+    exhaustive_two_way_split,
+    find_split,
+    merge_stage,
+    pipe_it_search,
+    work_flow,
+)
 from .perfmodel import LayerTimePredictor, MultiCoreModel, SingleCoreModel
 from .pipeline import (
     Pipeline,
@@ -16,14 +24,17 @@ from .pipeline import (
     stage_time,
 )
 from .platform import CoreType, HeteroPlatform, StageConfig, hikey970
-from .simulator import SimResult, simulate
+from .simulator import SimResult, SimulatedClock, simulate
 
 __all__ = [
     "ConvDescriptor",
     "GemmDims",
+    "apply_correction",
+    "scale_core_type",
     "conv_descriptor",
     "fc_descriptor",
     "exhaustive_search",
+    "exhaustive_two_way_split",
     "find_split",
     "merge_stage",
     "pipe_it_search",
@@ -43,5 +54,6 @@ __all__ = [
     "StageConfig",
     "hikey970",
     "SimResult",
+    "SimulatedClock",
     "simulate",
 ]

@@ -127,6 +127,36 @@ def calibrate(
     return MultiCoreModel.fit(single, multi_samples, tile_size=tile_size)
 
 
+# ---------------------------------------------------------------------------
+# Online correction (the adaptive runtime's calibration primitive)
+# ---------------------------------------------------------------------------
+#
+# The offline fit above produces the Eq. 5/8 *prior*; the serving runtime
+# observes actual per-stage service times (metrics.py) and folds them back
+# into the time matrix as per-core-type multiplicative corrections — the
+# minimal model that captures the paper's dominant error mode (Table III:
+# whole-cluster mis-prediction, e.g. DVFS or contention slowing one cluster
+# uniformly).  See serving/adaptive.py for the EWMA estimator.
+
+def apply_correction(
+    T: Sequence[Dict], correction: Dict[str, float]
+) -> List[Dict]:
+    """Scale a time matrix by per-core-type factors: ``T'[l][(ct, n)] =
+    T[l][(ct, n)] * correction.get(ct, 1.0)``.  Returns a new matrix."""
+    return [
+        {stage: t * correction.get(stage[0], 1.0) for stage, t in row.items()}
+        for row in T
+    ]
+
+
+def scale_core_type(
+    T: Sequence[Dict], core_type: str, factor: float
+) -> List[Dict]:
+    """A drifted copy of ``T`` with one cluster uniformly ``factor`` x
+    slower — the synthetic-drift injector used by tests and benchmarks."""
+    return apply_correction(T, {core_type: factor})
+
+
 def synthetic_model(tile_size: int = 16) -> MultiCoreModel:
     """A deterministic analytical model (no host measurement) for tests and
     CI: times follow a two-term roofline ``max(flops/F, bytes/B)`` with a

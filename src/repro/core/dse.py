@@ -222,6 +222,29 @@ def pipe_it_search(
 # Exhaustive reference search (small instances only; used by tests/benches)
 # ---------------------------------------------------------------------------
 
+def exhaustive_two_way_split(
+    layers: Sequence[int],
+    T: TimeMatrix,
+    stage_a: StageConfig,
+    stage_b: StageConfig,
+) -> Tuple[Tuple[Tuple[int, ...], Tuple[int, ...]], float]:
+    """Brute-force optimal contiguous two-way split of ``layers``.
+
+    Tries every prefix/suffix cut (the only splits Algorithm 1 can emit)
+    and returns ``((left, right), bottleneck)`` minimising
+    ``max(T_left^a, T_right^b)``.  O(n^2); reference oracle for the
+    ``find_split`` property tests."""
+    ordered = list(layers)
+    best: Optional[Tuple[Tuple[int, ...], Tuple[int, ...]]] = None
+    best_t = float("inf")
+    for k in range(len(ordered) + 1):
+        left, right = tuple(ordered[:k]), tuple(ordered[k:])
+        t = max(stage_time(T, left, stage_a), stage_time(T, right, stage_b))
+        if t < best_t:
+            best, best_t = (left, right), t
+    assert best is not None
+    return best, best_t
+
 def exhaustive_search(
     n_layers: int,
     platform: HeteroPlatform,

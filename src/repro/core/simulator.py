@@ -13,10 +13,41 @@ free, which is precisely the paper's motivation for layer-level splits).
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import List, Optional, Sequence
 
 from .pipeline import PipelinePlan, TimeMatrix
 from .platform import HeteroPlatform
+
+
+class SimulatedClock:
+    """A virtual monotone clock for deterministic control-loop runs.
+
+    The adaptive runtime (serving/adaptive.py) periodically samples a
+    clock; under test the discrete-event simulator advances this one by
+    each round's makespan instead of waiting wall time, so every run of
+    the calibrate -> detect -> re-plan loop is exactly reproducible.
+    The interface is the subset of ``time`` the runtime uses: ``now()``
+    (a perf_counter analogue) and ``sleep()`` (which simply advances).
+    """
+
+    def __init__(self, start: float = 0.0):
+        self._now = float(start)
+        self._lock = threading.Lock()
+
+    def now(self) -> float:
+        with self._lock:
+            return self._now
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError("clock cannot go backwards")
+        with self._lock:
+            self._now += dt
+            return self._now
+
+    def sleep(self, dt: float) -> None:
+        self.advance(max(dt, 0.0))
 
 
 @dataclasses.dataclass

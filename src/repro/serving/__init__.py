@@ -12,7 +12,23 @@ paper's equations):
   queues, backpressure.
 * :mod:`.planner`  — ``AutoPlanner`` / ``serve()``: perf model → DSE →
   running server in one call.
+* :mod:`.adaptive` — the closed loop: online calibrator → drift detector
+  → re-plan → hot-swap (``serve(adaptive=True)``).
 """
+from .adaptive import (
+    AdaptiveConfig,
+    AdaptiveController,
+    AdaptiveMonitor,
+    DriftDetector,
+    DriftingMatrix,
+    OnlineCalibrator,
+    ReplanEvent,
+    SimulatedServing,
+    StageObservation,
+    attach_adaptive,
+    delayed_stage_fn_builder,
+    run_adaptive_loop,
+)
 from .batching import MicroBatch, gather, split_rows, stack_envs
 from .engine import PipelinedGraphEngine, SingleStageEngine, build_stage_fns
 from .metrics import ServerMetrics, StageMetrics, percentile
@@ -26,8 +42,20 @@ from .server import (
 )
 
 __all__ = [
+    "AdaptiveConfig",
+    "AdaptiveController",
+    "AdaptiveMonitor",
     "AutoPlanner",
     "Backpressure",
+    "DriftDetector",
+    "DriftingMatrix",
+    "OnlineCalibrator",
+    "ReplanEvent",
+    "SimulatedServing",
+    "StageObservation",
+    "attach_adaptive",
+    "delayed_stage_fn_builder",
+    "run_adaptive_loop",
     "MicroBatch",
     "PipelineServer",
     "PipelinedGraphEngine",

@@ -1,0 +1,543 @@
+"""Online adaptive re-planning — closing the paper's open loop.
+
+Pipe-it computes its plan once, offline, from the Eq. 5/8 *predicted*
+time matrix; the paper's own Table III reports up to ~15% prediction
+error, and on a real board the truth also *drifts* (DVFS, thermal
+throttling, co-runners slowing one cluster).  The serving runtime
+already measures exactly what the planner consumed as input — per-stage
+service times (metrics.py, the empirical Eq. 10) — so this module feeds
+them back:
+
+    observe -> calibrate -> detect drift -> re-plan -> hot-swap
+
+* :class:`OnlineCalibrator` — folds observed per-stage service times
+  into the time matrix as per-core-type EWMA corrections over the
+  Eq. 5/8 prior.  A stage observation only constrains the *sum* of its
+  layers' times, so the correction is per core type (cluster), which is
+  also the paper's dominant error mode: whole-cluster mis-prediction.
+* :class:`DriftDetector` — triggers when the observed bottleneck-stage
+  time has diverged from the plan's own prediction beyond a relative
+  threshold for ``patience`` consecutive samples (debounced so one noisy
+  micro-batch cannot force a re-plan).
+* :class:`AdaptiveController` — on a trigger, re-runs the full DSE
+  (``pipe_it_search``, Algorithms 1-3) on the calibrated matrix and
+  adopts the new plan only if its predicted throughput (Eq. 12) beats
+  the current plan's by ``min_gain`` — re-planning is cheap, swapping
+  drains the pipeline, so the swap must pay for itself.
+* :class:`AdaptiveMonitor` — the runtime attachment: a daemon thread
+  that samples a live :class:`~repro.serving.server.PipelineServer`'s
+  stage counters, steps the controller, and hot-swaps via
+  ``server.swap_plan`` (the drain-and-switch epoch protocol — no
+  in-flight ticket is ever dropped).
+
+Determinism for tests: :class:`SimulatedServing` runs the same control
+loop against the discrete-event simulator (core/simulator.py) on a
+:class:`~repro.core.simulator.SimulatedClock` — observed stage times
+come from a ground-truth matrix that tests drift at will, so every
+calibrate/detect/re-plan trajectory is exactly reproducible.
+:func:`delayed_stage_fn_builder` is the live-server analogue (fake-stage
+mode): real outputs, scripted service delays.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+from ..core.calibration import apply_correction, scale_core_type
+from ..core.dse import pipe_it_search
+from ..core.pipeline import PipelinePlan, TimeMatrix, stage_time
+from ..core.platform import HeteroPlatform, StageConfig
+from ..core.simulator import SimulatedClock, simulate
+from .engine import build_stage_fns
+from .server import PipelineServer, ServerClosed
+
+
+@dataclasses.dataclass(frozen=True)
+class StageObservation:
+    """One stage's measured behaviour over a sampling window.
+
+    ``service_s`` is the *per-image* service time (busy seconds / items),
+    directly comparable to Eq. 10's ``T_{L_i}^{P_i}``.
+    """
+
+    stage: StageConfig
+    layers: Tuple[int, ...]
+    service_s: float
+    items: int = 1
+
+
+class OnlineCalibrator:
+    """EWMA per-core-type correction of the Eq. 5/8 prior time matrix.
+
+    For every observed stage, the ratio observed/predicted updates the
+    correction factor of the stage's core type:
+
+        c_ct <- (1 - alpha) * c_ct + alpha * (T_obs / T_pred)
+
+    ``matrix()`` then returns ``T'[l][(ct, n)] = T[l][(ct, n)] * c_ct``.
+    Unobserved core types keep their prior (c = 1).
+    """
+
+    def __init__(self, prior: TimeMatrix, alpha: float = 0.4):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError("alpha must be in (0, 1]")
+        self.prior: List[Dict[StageConfig, float]] = [dict(row) for row in prior]
+        self.alpha = alpha
+        self.correction: Dict[str, float] = {}
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.prior)
+
+    def observe(self, observations: Sequence[StageObservation]) -> None:
+        for obs in observations:
+            if not obs.layers or obs.service_s <= 0.0:
+                continue
+            predicted = stage_time(self.prior, obs.layers, obs.stage)
+            if predicted <= 0.0:
+                continue
+            ratio = obs.service_s / predicted
+            core_type = obs.stage[0]
+            old = self.correction.get(core_type, 1.0)
+            self.correction[core_type] = (1 - self.alpha) * old + self.alpha * ratio
+
+    def rebase(self, observations: Sequence[StageObservation]) -> None:
+        """Change-point reset: snap corrections to the latest window.
+
+        The EWMA tracks slow drift; once the detector has *confirmed* a
+        sustained shift (``patience`` consecutive out-of-band windows),
+        the pre-drift memory is stale by definition — keeping it would
+        make the re-plan land between the old and new operating points.
+        So the controller rebases: each observed core type's correction
+        becomes the mean observed/predicted ratio of this window alone.
+        """
+        ratios: Dict[str, List[float]] = {}
+        for obs in observations:
+            if not obs.layers or obs.service_s <= 0.0:
+                continue
+            predicted = stage_time(self.prior, obs.layers, obs.stage)
+            if predicted <= 0.0:
+                continue
+            ratios.setdefault(obs.stage[0], []).append(obs.service_s / predicted)
+        for core_type, rs in ratios.items():
+            self.correction[core_type] = sum(rs) / len(rs)
+
+    def matrix(self) -> List[Dict[StageConfig, float]]:
+        """The calibrated time matrix (prior x current corrections)."""
+        return apply_correction(self.prior, self.correction)
+
+
+@dataclasses.dataclass
+class DriftDetector:
+    """Debounced relative-deviation trigger on the bottleneck stage.
+
+    ``update`` returns True once the observed bottleneck time has
+    deviated from the planned prediction by more than ``threshold``
+    (relative) for ``patience`` consecutive samples.  The caller resets
+    after acting.
+    """
+
+    threshold: float = 0.25
+    patience: int = 2
+    last_deviation: float = 0.0
+    _hits: int = 0
+
+    def update(self, predicted_s: float, observed_s: float) -> bool:
+        self.last_deviation = abs(observed_s - predicted_s) / max(
+            predicted_s, 1e-12
+        )
+        if self.last_deviation > self.threshold:
+            self._hits += 1
+        else:
+            self._hits = 0
+        return self._hits >= self.patience
+
+    def reset(self) -> None:
+        self._hits = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplanEvent:
+    """One controller decision that re-ran the DSE (swap or rejection)."""
+
+    round: int
+    deviation: float
+    old_plan: PipelinePlan
+    new_plan: PipelinePlan
+    predicted_gain: float  # new/old Eq. 12 throughput on the calibrated T
+    swapped: bool
+
+
+@dataclasses.dataclass
+class AdaptiveConfig:
+    """Knobs of the control loop (defaults tuned for the benchmarks)."""
+
+    alpha: float = 0.4  # calibrator EWMA weight
+    threshold: float = 0.25  # drift trigger: relative bottleneck deviation
+    patience: int = 2  # consecutive out-of-band samples before re-plan
+    min_gain: float = 1.05  # required predicted speedup to hot-swap
+    interval_s: float = 0.25  # monitor sampling period (live servers)
+    min_items: int = 1  # min new items per stage for a valid sample
+
+
+class AdaptiveController:
+    """Calibrate -> detect -> re-plan; the policy half of the loop.
+
+    Owns the belief state: the calibrated matrix, the matrix the current
+    plan was planned against (``T_planned``), and the current plan.  One
+    ``step(observations)`` folds a sample in and returns the new
+    :class:`PipelinePlan` when a hot-swap is warranted, else None.
+    """
+
+    def __init__(
+        self,
+        prior: TimeMatrix,
+        plan: PipelinePlan,
+        platform: HeteroPlatform,
+        mode: str = "best",
+        config: Optional[AdaptiveConfig] = None,
+    ):
+        self.config = config or AdaptiveConfig()
+        self.calibrator = OnlineCalibrator(prior, alpha=self.config.alpha)
+        self.detector = DriftDetector(
+            threshold=self.config.threshold, patience=self.config.patience
+        )
+        self.platform = platform
+        self.mode = mode
+        self.plan = plan
+        self.T_planned: TimeMatrix = self.calibrator.matrix()
+        self.rounds = 0
+        self.swaps = 0
+        # Bounded: an oscillating environment re-plans forever and a
+        # persistent server must not grow memory with uptime.
+        self.history: Deque[ReplanEvent] = collections.deque(maxlen=256)
+
+    def step(
+        self, observations: Sequence[StageObservation]
+    ) -> Optional[PipelinePlan]:
+        self.rounds += 1
+        self.calibrator.observe(observations)
+        current = {
+            (tuple(layers), stage)
+            for layers, stage in zip(
+                self.plan.allocation, self.plan.pipeline.stages
+            )
+        }
+        relevant = [
+            o.service_s
+            for o in observations
+            if (o.layers, o.stage) in current and o.service_s > 0.0
+        ]
+        if not relevant:
+            return None
+        observed_bottleneck = max(relevant)
+        predicted_bottleneck = self.plan.bottleneck(self.T_planned)
+        if not self.detector.update(predicted_bottleneck, observed_bottleneck):
+            return None
+        deviation = self.detector.last_deviation
+        self.detector.reset()
+        # Confirmed change-point: re-plan from a belief rebased on the
+        # sustained recent window, and measure future drift against it so
+        # the same shift is not re-triggered against a stale prediction.
+        self.calibrator.rebase(observations)
+        T_new = self.calibrator.matrix()
+        self.T_planned = T_new
+        candidate = pipe_it_search(
+            self.calibrator.n_layers, self.platform, T_new, mode=self.mode
+        )
+        gain = candidate.throughput(T_new) / max(
+            self.plan.throughput(T_new), 1e-12
+        )
+        swapped = gain >= self.config.min_gain and candidate != self.plan
+        self.history.append(
+            ReplanEvent(
+                round=self.rounds,
+                deviation=deviation,
+                old_plan=self.plan,
+                new_plan=candidate,
+                predicted_gain=gain,
+                swapped=swapped,
+            )
+        )
+        if not swapped:
+            return None
+        self.plan = candidate
+        self.swaps += 1
+        return candidate
+
+
+# ---------------------------------------------------------------------------
+# Live-server attachment
+# ---------------------------------------------------------------------------
+
+class AdaptiveMonitor:
+    """Background control loop over a live :class:`PipelineServer`.
+
+    Every ``interval_s`` it turns the server's per-stage counters into
+    :class:`StageObservation` deltas (per-image busy time over the new
+    items in the window), steps the controller, and on a re-plan calls
+    ``server.swap_plan`` — the epoch protocol guarantees no in-flight
+    ticket is dropped.  Counter baselines reset on every epoch bump
+    because the stage structure (and its metrics objects) changed.
+    """
+
+    def __init__(
+        self,
+        server: PipelineServer,
+        controller: AdaptiveController,
+        interval_s: Optional[float] = None,
+    ):
+        self.server = server
+        self.controller = controller
+        self.interval_s = (
+            interval_s
+            if interval_s is not None
+            else controller.config.interval_s
+        )
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._seen_epoch = -1
+        self._base: List[Tuple[float, int]] = []
+        # Last exception seen by the background loop (None while healthy).
+        # Transient faults are retried; after max_failures consecutive
+        # ones the loop gives up and PipelineServer.stop() raises this —
+        # adaptation must not silently degrade to static planning.
+        # Server-closed shutdowns are normal and not recorded.
+        self.error: Optional[BaseException] = None
+        self.max_failures = 3
+        self._consecutive_failures = 0
+
+    def sample(self) -> List[StageObservation]:
+        """One observation window (public so tests can drive it directly)."""
+        if self.server.epoch != self._seen_epoch:
+            self._seen_epoch = self.server.epoch
+            self._base = [(0.0, 0) for _ in self.server.metrics.stages]
+        plan = self.server.plan
+        stages = self.server.metrics.stages
+        if len(stages) != plan.pipeline.p or len(stages) != len(self._base):
+            return []  # raced with a concurrent swap; next window is clean
+        out: List[StageObservation] = []
+        min_items = self.controller.config.min_items
+        for i, m in enumerate(stages):
+            busy, items = m.totals()  # consistent pair vs. the worker
+            base_busy, base_items = self._base[i]
+            d_items = items - base_items
+            if d_items < min_items:
+                continue
+            self._base[i] = (busy, items)
+            out.append(
+                StageObservation(
+                    stage=plan.pipeline.stages[i],
+                    layers=tuple(plan.allocation[i]),
+                    service_s=(busy - base_busy) / d_items,
+                    items=d_items,
+                )
+            )
+        return out
+
+    def step(self) -> Optional[PipelinePlan]:
+        """Sample + control + (maybe) hot-swap; returns the swapped plan."""
+        observations = self.sample()
+        if not observations:
+            return None
+        prev_plan, prev_swaps = self.controller.plan, self.controller.swaps
+        new_plan = self.controller.step(observations)
+        if new_plan is None:
+            return None
+        try:
+            self.server.swap_plan(new_plan)
+        except BaseException:
+            # The server still runs the old plan (a prepare-phase failure
+            # changes no server state): revert the controller's belief so
+            # it keeps filtering observations against what actually runs
+            # and will re-attempt the swap on the next trigger.
+            self.controller.plan = prev_plan
+            self.controller.swaps = prev_swaps
+            if self.controller.history:
+                self.controller.history[-1] = dataclasses.replace(
+                    self.controller.history[-1], swapped=False
+                )
+            raise
+        return new_plan
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self.interval_s):
+            try:
+                self.step()
+                self._consecutive_failures = 0
+                self.error = None  # recovered: a past hiccup is not a failure
+            except ServerClosed:
+                return  # normal shutdown race
+            except Exception as e:  # noqa: BLE001 — daemon must not spray
+                # swap_plan re-raises the raw worker error (not always a
+                # ServingError); keep it observable instead of dying mute.
+                self.error = e
+                self._consecutive_failures += 1
+                if (
+                    self._consecutive_failures >= self.max_failures
+                    or self.server._closed
+                ):
+                    return
+
+    def start(self) -> "AdaptiveMonitor":
+        if self._thread is None:
+            self._thread = threading.Thread(
+                target=self._loop, name="pipe-adaptive", daemon=True
+            )
+            self._thread.start()
+        return self
+
+    def stop(self, timeout: float = 10.0) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=timeout)
+
+
+def attach_adaptive(
+    server: PipelineServer,
+    prior: TimeMatrix,
+    platform: HeteroPlatform,
+    mode: str = "best",
+    config: Optional[AdaptiveConfig] = None,
+    start: bool = True,
+) -> AdaptiveMonitor:
+    """Wire the closed loop onto a running server (``serve(adaptive=True)``).
+
+    The monitor is stored as ``server.monitor`` so ``server.stop()``
+    shuts the control loop down before draining the pipeline.
+    """
+    controller = AdaptiveController(
+        prior=prior,
+        plan=server.plan,
+        platform=platform,
+        mode=mode,
+        config=config,
+    )
+    monitor = AdaptiveMonitor(server, controller)
+    server.monitor = monitor
+    if start:
+        monitor.start()
+    return monitor
+
+
+# ---------------------------------------------------------------------------
+# Deterministic harnesses (simulator-backed and fake-stage modes)
+# ---------------------------------------------------------------------------
+
+class DriftingMatrix:
+    """Mutable ground-truth time matrix; tests scale a cluster mid-run."""
+
+    def __init__(self, T: TimeMatrix):
+        self.T: List[Dict[StageConfig, float]] = [dict(row) for row in T]
+
+    def scale(self, core_type: str, factor: float) -> None:
+        self.T = scale_core_type(self.T, core_type, factor)
+
+
+class SimulatedServing:
+    """The serving side of the control loop, simulator-backed.
+
+    Stands in for a live ``PipelineServer``: ``observe(plan)`` runs the
+    discrete-event simulator against a (driftable) ground-truth matrix,
+    advances a :class:`SimulatedClock` by the round's makespan, and
+    returns the per-stage observations a monitor window would have
+    produced.  Zero wall time, zero threads, bit-for-bit reproducible.
+    """
+
+    def __init__(
+        self,
+        truth: TimeMatrix,
+        platform: HeteroPlatform,
+        n_images_per_round: int = 64,
+        clock: Optional[SimulatedClock] = None,
+    ):
+        self.truth = DriftingMatrix(truth)
+        self.platform = platform
+        self.n_images_per_round = n_images_per_round
+        self.clock = clock if clock is not None else SimulatedClock()
+        # Steady-state throughput of the plan most recently observe()d —
+        # saves callers a second identical simulate() per round.
+        self.last_throughput = 0.0
+
+    def inject_drift(self, core_type: str, factor: float) -> None:
+        """One cluster becomes uniformly ``factor`` x slower from now on."""
+        self.truth.scale(core_type, factor)
+
+    def observe(self, plan: PipelinePlan) -> List[StageObservation]:
+        result = simulate(
+            plan, self.truth.T, self.platform, n_images=self.n_images_per_round
+        )
+        self.clock.advance(result.makespan_s)
+        self.last_throughput = result.steady_throughput
+        times = plan.stage_times(self.truth.T)
+        return [
+            StageObservation(
+                stage=stage,
+                layers=tuple(layers),
+                service_s=t,
+                items=self.n_images_per_round,
+            )
+            for stage, layers, t in zip(
+                plan.pipeline.stages, plan.allocation, times
+            )
+        ]
+
+    def throughput(self, plan: PipelinePlan) -> float:
+        """Steady-state throughput of ``plan`` on the CURRENT truth."""
+        return simulate(
+            plan, self.truth.T, self.platform, n_images=self.n_images_per_round
+        ).steady_throughput
+
+
+def run_adaptive_loop(
+    controller: AdaptiveController,
+    env: SimulatedServing,
+    rounds: int,
+    on_swap: Optional[Callable[[int, PipelinePlan], None]] = None,
+) -> List[float]:
+    """Drive controller vs. simulator for ``rounds``; returns per-round
+    throughput of whatever plan was active during each round."""
+    trajectory: List[float] = []
+    for r in range(rounds):
+        observations = env.observe(controller.plan)
+        trajectory.append(env.last_throughput)  # plan active this round
+        new_plan = controller.step(observations)
+        if new_plan is not None and on_swap is not None:
+            on_swap(r, new_plan)
+    return trajectory
+
+
+def delayed_stage_fn_builder(
+    truth: DriftingMatrix,
+    scale: float = 1.0,
+    sleep: Callable[[float], None] = time.sleep,
+):
+    """Fake-stage mode for a LIVE server: real outputs, scripted timing.
+
+    Returns a ``stage_fn_builder`` for :class:`PipelineServer` that wraps
+    the real jitted stage functions with a sleep of
+    ``scale * stage_time(truth.T, layers, stage)`` — so the threaded
+    runtime behaves (timing-wise) like the ground-truth board, outputs
+    stay numerically identical to single-stage execution, and a test can
+    drift ``truth`` mid-run and watch the whole loop (metrics ->
+    calibrator -> detector -> re-plan -> hot-swap) respond for real.
+    """
+
+    def builder(graph, plan: PipelinePlan):
+        real_fns = build_stage_fns(graph, plan)
+        fns = []
+        for fn, layers, stage in zip(
+            real_fns, plan.allocation, plan.pipeline.stages
+        ):
+            def delayed(params, env, _fn=fn, _layers=tuple(layers), _stage=stage):
+                out = _fn(params, env)
+                sleep(scale * stage_time(truth.T, _layers, _stage))
+                return out
+
+            fns.append(delayed)
+        return fns
+
+    return builder

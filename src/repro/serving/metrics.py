@@ -27,11 +27,14 @@ import collections
 import dataclasses
 import threading
 import time
-from typing import Any, Deque, Dict, List, Optional, Sequence
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
 # Sliding-window sizes for latency samples (per stage / end-to-end).
 STAGE_WINDOW = 2048
 E2E_WINDOW = 8192
+# Retired-epoch snapshots kept after plan hot-swaps (bounded for the same
+# reason as the latency windows: uptime must not grow memory).
+EPOCH_HISTORY = 64
 
 
 def percentile(samples: Sequence[float], q: float) -> float:
@@ -47,7 +50,13 @@ def percentile(samples: Sequence[float], q: float) -> float:
 
 @dataclasses.dataclass
 class StageMetrics:
-    """Counters owned by one stage worker (single-writer, lock-free)."""
+    """Counters owned by one stage worker.
+
+    Single-writer; the small lock only keeps the (busy_s, items) pair
+    consistent for readers like the adaptive monitor — a torn pair would
+    shift one micro-batch's busy time into the next observation window
+    and fake a service-time spike.
+    """
 
     name: str
     batches: int = 0
@@ -59,13 +68,22 @@ class StageMetrics:
     )
     started_at: Optional[float] = None
     stopped_at: Optional[float] = None
+    _pair_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False
+    )
 
     def record(self, service_time: float, n_items: int, n_padded: int = 0) -> None:
-        self.batches += 1
-        self.items += n_items
-        self.padded_items += n_padded
-        self.busy_s += service_time
+        with self._pair_lock:
+            self.batches += 1
+            self.items += n_items
+            self.padded_items += n_padded
+            self.busy_s += service_time
         self.service_s.append(service_time)
+
+    def totals(self) -> Tuple[float, int]:
+        """A mutually-consistent (busy_s, items) snapshot."""
+        with self._pair_lock:
+            return self.busy_s, self.items
 
     def occupancy(self) -> float:
         """Busy fraction over the worker's active wall time."""
@@ -100,11 +118,28 @@ class ServerMetrics:
 
     def __init__(self, stage_names: List[str]):
         self.stages = [StageMetrics(name=n) for n in stage_names]
+        self.epoch = 0
+        self.stage_history: Deque[List[Dict[str, Any]]] = collections.deque(
+            maxlen=EPOCH_HISTORY
+        )
         self._lock = threading.Lock()
         self._e2e_s: Deque[float] = collections.deque(maxlen=E2E_WINDOW)
         self._completed = 0
         self._first_submit: Optional[float] = None
         self._last_complete: Optional[float] = None
+
+    def new_epoch(self, stage_names: List[str]) -> None:
+        """Roll per-stage metrics for a plan hot-swap (server epoch bump).
+
+        The retiring epoch's final stage snapshots are archived in
+        ``stage_history``; end-to-end counters (completed, latency,
+        throughput window) deliberately persist — the request stream is
+        continuous across the swap, only the stage structure changes.
+        """
+        with self._lock:
+            self.stage_history.append([s.snapshot() for s in self.stages])
+            self.stages = [StageMetrics(name=n) for n in stage_names]
+            self.epoch += 1
 
     # ------------------------------------------------------------- writers
     def note_submit(self, now: float) -> None:
@@ -137,6 +172,7 @@ class ServerMetrics:
             completed = self._completed
         return {
             "completed": completed,
+            "epoch": self.epoch,
             "throughput_img_s": self.throughput(),
             "e2e_p50_s": percentile(e2e, 50),
             "e2e_p95_s": percentile(e2e, 95),

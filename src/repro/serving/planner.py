@@ -35,6 +35,7 @@ from ..core.dse import pipe_it_search
 from ..core.perfmodel import LayerTimePredictor
 from ..core.pipeline import PipelinePlan, TimeMatrix
 from ..core.platform import CoreType, HeteroPlatform, hikey970
+from .adaptive import AdaptiveConfig, attach_adaptive
 from .server import PipelineServer
 
 
@@ -104,6 +105,7 @@ class AutoPlanner:
         queue_depth: int = 2,
         seed: int = 0,
         warmup: bool = True,
+        stage_fn_builder=None,
     ) -> PipelineServer:
         """Plan the pipeline and construct a (warmed, started) server."""
         if params is None:
@@ -116,6 +118,7 @@ class AutoPlanner:
             batch_size=batch_size,
             flush_timeout_s=flush_timeout_s,
             queue_depth=queue_depth,
+            stage_fn_builder=stage_fn_builder,
         )
         if warmup:
             server.warmup()
@@ -135,8 +138,17 @@ def serve(
     queue_depth: int = 2,
     seed: int = 0,
     warmup: bool = True,
+    adaptive: bool = False,
+    adaptive_config: Optional[AdaptiveConfig] = None,
+    stage_fn_builder=None,
 ) -> PipelineServer:
     """One call from model name (or Graph) to a running PipelineServer.
+
+    With ``adaptive=True`` the server also gets the closed control loop
+    of :mod:`repro.serving.adaptive`: a monitor thread calibrates the
+    planner's time matrix against observed stage times, and re-plans +
+    hot-swaps the layer allocation when the bottleneck drifts
+    (``server.monitor`` holds it; ``server.stop()`` shuts it down).
 
     >>> server = serve("squeezenet", mode="best", batch_size=8)
     >>> ticket = server.submit(image)
@@ -149,13 +161,24 @@ def serve(
         mode=mode,
         source=source,
     )
-    return planner.build(
+    T = planner.time_matrix(graph) if time_matrix is None else time_matrix
+    server = planner.build(
         graph,
         params,
-        time_matrix=time_matrix,
+        time_matrix=T,
         batch_size=batch_size,
         flush_timeout_s=flush_timeout_s,
         queue_depth=queue_depth,
         seed=seed,
         warmup=warmup,
+        stage_fn_builder=stage_fn_builder,
     )
+    if adaptive:
+        attach_adaptive(
+            server,
+            prior=T,
+            platform=planner.platform,
+            mode=mode,
+            config=adaptive_config,
+        )
+    return server

@@ -102,6 +102,12 @@ class PipelineServer:
     queue_depth : bound on each inter-stage queue (micro-batches) and, x
         ``batch_size``, on the ingress queue (images) — the backpressure
         surface.
+    stage_fn_builder : ``(graph, plan) -> [stage_fn]`` factory used for the
+        initial plan AND for every ``swap_plan``; defaults to the real
+        jitted executables (:func:`repro.serving.engine.build_stage_fns`).
+        The adaptive tests inject fake-stage builders here (real outputs
+        plus a scripted service delay) so the whole control loop can run
+        against known timings.
     """
 
     def __init__(
@@ -113,6 +119,7 @@ class PipelineServer:
         batch_size: int = 4,
         flush_timeout_s: float = 0.01,
         queue_depth: int = 2,
+        stage_fn_builder=None,
     ):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
@@ -122,50 +129,156 @@ class PipelineServer:
         self.batch_size = batch_size
         self.flush_timeout_s = flush_timeout_s
         self.queue_depth = queue_depth
-        self._stage_fns = build_stage_fns(graph, plan)
+        self._stage_fn_builder = (
+            stage_fn_builder if stage_fn_builder is not None else build_stage_fns
+        )
+        self._stage_fns = self._stage_fn_builder(graph, plan)
         n = len(self._stage_fns)
         self._ingress: "queue.Queue" = queue.Queue(maxsize=queue_depth * batch_size)
         self._qs: List["queue.Queue"] = [
             queue.Queue(maxsize=queue_depth) for _ in range(n)
         ]  # _qs[i] feeds stage i+1 for i<n-1; _qs[-1] feeds the egress worker
-        stage_names = [
-            f"{i}:{t}{c}" for i, (t, c) in enumerate(plan.pipeline.stages)
-        ]
-        self.metrics = ServerMetrics(stage_names)
+        self.metrics = ServerMetrics(self._stage_names(plan))
         self._threads: List[threading.Thread] = []
         self._inflight: set = set()
+        self._epoch = 0
+        # Optional adaptive-control attachment (serving/adaptive.py); when
+        # set, stop() shuts it down before draining the pipeline.
+        self.monitor = None
         self._lock = threading.Lock()
         # Serializes ingress puts against stop()'s shutdown sentinel: a
         # submit that passed the closed-check is guaranteed to land its
         # image AHEAD of the sentinel, so it gets flushed, not stranded.
+        # swap_plan() holds it for a whole drain; _sealed marks those long
+        # holds so non-blocking submits shed immediately instead of
+        # mistaking a peer submit's microsecond hold for saturation.
         self._submit_lock = threading.Lock()
+        self._sealed = False
         self._started = False
         self._closed = False
         self._error: Optional[BaseException] = None
 
     # ------------------------------------------------------------ lifecycle
-    def start(self) -> "PipelineServer":
-        with self._lock:
-            if self._started:
-                return self
-            if self._closed:
-                raise ServerClosed("server already stopped")
-            self._started = True
+    @staticmethod
+    def _stage_names(plan: PipelinePlan) -> List[str]:
+        return [f"{i}:{t}{c}" for i, (t, c) in enumerate(plan.pipeline.stages)]
+
+    @property
+    def epoch(self) -> int:
+        """Worker generation: bumped by every completed swap_plan()."""
+        return self._epoch
+
+    def _spawn_workers(self) -> None:
         n = len(self._stage_fns)
+        e = self._epoch
         self._threads = [
-            threading.Thread(target=self._stage0_worker, name="pipe-stage0", daemon=True)
+            threading.Thread(
+                target=self._stage0_worker, name=f"pipe-e{e}-stage0", daemon=True
+            )
         ]
         for i in range(1, n):
             self._threads.append(
                 threading.Thread(
-                    target=self._stage_worker, args=(i,), name=f"pipe-stage{i}", daemon=True
+                    target=self._stage_worker, args=(i,),
+                    name=f"pipe-e{e}-stage{i}", daemon=True,
                 )
             )
         self._threads.append(
-            threading.Thread(target=self._egress_worker, name="pipe-egress", daemon=True)
+            threading.Thread(
+                target=self._egress_worker, name=f"pipe-e{e}-egress", daemon=True
+            )
         )
         for t in self._threads:
             t.start()
+
+    def start(self) -> "PipelineServer":
+        # _submit_lock spans the _started publish AND the spawn: a
+        # concurrent swap_plan (which serializes on the same lock) can
+        # never observe started=True with no worker threads to drain.
+        with self._submit_lock:
+            with self._lock:
+                if self._started:
+                    return self
+                if self._closed:
+                    raise ServerClosed("server already stopped")
+                self._started = True
+            self._spawn_workers()
+        return self
+
+    def swap_plan(
+        self,
+        plan: PipelinePlan,
+        *,
+        warmup: bool = True,
+        timeout: float = 60.0,
+    ) -> "PipelineServer":
+        """Hot-swap the stage->layer allocation (drain-and-switch epochs).
+
+        The re-planner's runtime half: adopt a new :class:`PipelinePlan`
+        on a live server without dropping a single in-flight ticket.
+        Protocol (each server generation is an *epoch*):
+
+        1. **Prepare** (concurrent with serving): build and, by default,
+           warm the new epoch's stage executables — compilation happens
+           while the old epoch keeps draining traffic.
+        2. **Seal** the ingress: take ``_submit_lock`` so new ``submit()``
+           calls block (they queue behind the swap, they are never
+           dropped) and the old epoch's image set is frozen.
+        3. **Drain**: send the shutdown sentinel through the old workers;
+           every image admitted before the seal flows through the *old*
+           plan to its ticket.  Old workers then exit and are joined.
+        4. **Switch**: install the new plan/stage functions/queues, roll
+           the per-stage metrics to a new epoch (end-to-end counters
+           persist), spawn the new workers, release the seal.
+
+        Raises :class:`ServerClosed` if the server was stopped, and
+        re-raises the worker error if the old epoch failed while
+        draining.  Returns ``self``.
+        """
+        n_layers = sum(len(s) for s in self.plan.allocation)
+        flat = [l for stage_layers in plan.allocation for l in stage_layers]
+        if flat != list(range(n_layers)):
+            raise ValueError(
+                f"new plan must partition layers 0..{n_layers - 1} in order, "
+                f"got {plan.notation()}"
+            )
+        # 1. Prepare off-line: compile the next epoch while the old one runs.
+        new_fns = self._stage_fn_builder(self.graph, plan)
+        if warmup:
+            self._warm(new_fns)
+        self._sealed = True  # non-blocking submits shed instantly from here
+        try:
+            with self._submit_lock:  # 2. seal: submits queue behind the swap
+                with self._lock:
+                    if self._closed:
+                        raise ServerClosed("server is closed") from self._error
+                    started = self._started
+                if started:
+                    # 3. drain the old epoch completely
+                    self._ingress.put(_SENTINEL)
+                    for t in self._threads:
+                        t.join(timeout=timeout)
+                    if any(t.is_alive() for t in self._threads):
+                        # Can't switch under a live old epoch; don't leave a
+                        # zombie either (accepting submits nobody consumes) —
+                        # close the server and fail the in-flight tickets.
+                        err = ServingError("old epoch failed to drain before swap")
+                        self._fail(err)
+                        raise err
+                    if self._error is not None:  # old epoch died while draining
+                        raise self._error
+                # 4. switch
+                self.plan = plan
+                self._stage_fns = new_fns
+                self._qs = [
+                    queue.Queue(maxsize=self.queue_depth) for _ in range(len(new_fns))
+                ]
+                self._epoch += 1
+                self.metrics.new_epoch(self._stage_names(plan))
+                if started:
+                    self._spawn_workers()
+        finally:
+            self._sealed = False
         return self
 
     def stop(self, timeout: float = 10.0) -> None:
@@ -174,6 +287,8 @@ class PipelineServer:
         Idempotent; re-raises the first worker error if the pipeline
         failed (so a crash can't be silently absorbed by shutdown).
         """
+        if self.monitor is not None:
+            self.monitor.stop()
         with self._lock:
             already_closed = self._closed
             self._closed = True
@@ -186,6 +301,12 @@ class PipelineServer:
                 t.join(timeout=timeout)
         if self._error is not None:
             raise self._error
+        # A dead adaptive loop must be as loud as a dead worker: if the
+        # monitor gave up on an error (and no worker error explains it),
+        # surface it here rather than let adaptation fail silently.
+        monitor_error = getattr(self.monitor, "error", None)
+        if monitor_error is not None:
+            raise ServingError("adaptive monitor failed") from monitor_error
 
     def __enter__(self) -> "PipelineServer":
         return self.start()
@@ -199,14 +320,17 @@ class PipelineServer:
             except Exception:
                 pass
 
-    def warmup(self) -> None:
-        """Compile every stage at the padded micro-batch shape."""
+    def _warm(self, fns) -> None:
         env = {
             "input": jnp.zeros((self.batch_size, *self.graph.input_shape), jnp.float32)
         }
-        for fn in self._stage_fns:
+        for fn in fns:
             env = fn(self.params, env)
         jax.block_until_ready(env)
+
+    def warmup(self) -> None:
+        """Compile every stage at the padded micro-batch shape."""
+        self._warm(self._stage_fns)
 
     # -------------------------------------------------------------- ingress
     def submit(
@@ -234,11 +358,31 @@ class PipelineServer:
             )
         now = time.perf_counter()
         ticket = Ticket(submitted_at=now)
-        with self._submit_lock:
+        # Honour the non-blocking/timeout contract on the submit lock too:
+        # during a swap_plan drain the lock is held for the whole drain, and
+        # a submit(block=False) / submit(timeout=...) must shed load rather
+        # than stall behind it.  Ordinary peer submits hold the lock only
+        # microseconds, so a short bounded acquire absorbs that contention
+        # without spurious Backpressure.
+        if block:
+            acquired = self._submit_lock.acquire(
+                timeout=-1 if timeout is None else timeout
+            )
+        elif self._sealed:
+            acquired = False  # drain in progress: shed with zero wait
+        else:
+            acquired = self._submit_lock.acquire(timeout=0.05)
+        if not acquired:
+            raise Backpressure(
+                "pipeline busy (plan swap or shutdown in progress)"
+            )
+        try:
             with self._lock:
                 if self._closed or self._error is not None:
                     raise ServerClosed("server is closed") from self._error
                 self._inflight.add(ticket)
+            if timeout is not None:
+                timeout = max(0.0, timeout - (time.perf_counter() - now))
             try:
                 self._ingress.put((ticket, x), block=block, timeout=timeout)
             except queue.Full:
@@ -248,6 +392,8 @@ class PipelineServer:
                     f"ingress full ({self._ingress.maxsize} images) — pipeline "
                     "saturated"
                 ) from None
+        finally:
+            self._submit_lock.release()
         # close the submit()/_fail() race: if a worker failed while we were
         # enqueueing, nothing will ever consume the item — fail the ticket
         # now instead of letting the caller block until timeout

@@ -1,0 +1,410 @@
+"""Adaptive re-planning: calibrator/detector units, the deterministic
+simulator-backed control loop (ISSUE 2 acceptance), and live hot-swap.
+
+The acceptance scenario: one cluster slows 2x mid-serve; the adaptive
+loop must re-plan and recover >= 80% of the oracle (re-planned-from-
+truth) throughput, no in-flight request may be dropped during the
+hot-swap, and outputs must stay numerically equal to the single-stage
+baseline.  The throughput half runs against the discrete-event
+simulator on a SimulatedClock (bit-for-bit deterministic); the no-drop/
+output-equality half runs on the real threaded server.
+"""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cnn.graph import Graph
+from repro.core import (
+    LayerTimePredictor,
+    SimulatedClock,
+    hikey970,
+    pipe_it_search,
+    scale_core_type,
+)
+from repro.core.calibration import synthetic_model
+from repro.core.descriptors import conv_descriptor
+from repro.serving import (
+    AdaptiveConfig,
+    AdaptiveController,
+    AdaptiveMonitor,
+    Backpressure,
+    DriftDetector,
+    DriftingMatrix,
+    OnlineCalibrator,
+    PipelineServer,
+    ServerClosed,
+    ServingError,
+    SimulatedServing,
+    SingleStageEngine,
+    StageObservation,
+    delayed_stage_fn_builder,
+    run_adaptive_loop,
+    serve,
+)
+
+PLAT = hikey970()
+
+
+def _net(n=12):
+    return [conv_descriptor(f"c{i}", 56, 64, 3, 64) for i in range(n)]
+
+
+def _matrix(descs):
+    return LayerTimePredictor(model=synthetic_model(), platform=PLAT).time_matrix(
+        descs
+    )
+
+
+def tiny_graph() -> Graph:
+    g = Graph("tiny", (16, 16, 3))
+    a = g.conv("c1", "input", 8, 3)
+    a = g.conv("c2", a, 8, 3, stride=2)
+    a = g.depthwise("d1", a)
+    a = g.conv("c3", a, 16, 1)
+    a = g.pool_max("p1", a, 2, 2)
+    a = g.conv("c4", a, 16, 3)
+    a = g.gap("gap", a)
+    a = g.fc("fc", a, 10)
+    g.softmax("sm", a)
+    return g
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    g = tiny_graph()
+    params = g.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    images = [
+        jnp.asarray(rng.standard_normal((1, 16, 16, 3)), jnp.float32)
+        for _ in range(24)
+    ]
+    eng = SingleStageEngine(g, params)
+    eng.warmup(images[0])
+    ref = eng.run(images)["outputs"]
+    T = _matrix(g.descriptors())
+    plan = pipe_it_search(len(g.descriptors()), PLAT, T, mode="best")
+    return g, params, images, ref, T, plan
+
+
+# ------------------------------------------------------------- calibrator
+def test_calibrator_converges_to_true_correction():
+    T = _matrix(_net(6))
+    cal = OnlineCalibrator(T, alpha=0.5)
+    layers = tuple(range(6))
+    true = scale_core_type(T, "B", 2.0)
+    obs = [
+        StageObservation(("B", 4), layers, sum(r[("B", 4)] for r in true))
+    ]
+    for _ in range(12):
+        cal.observe(obs)
+    assert cal.correction["B"] == pytest.approx(2.0, rel=1e-3)
+    # unobserved core type keeps the prior
+    assert "s" not in cal.correction
+    M = cal.matrix()
+    assert M[0][("B", 1)] == pytest.approx(2.0 * T[0][("B", 1)], rel=1e-3)
+    assert M[0][("s", 1)] == T[0][("s", 1)]
+
+
+def test_calibrator_rebase_snaps_to_window():
+    T = _matrix(_net(4))
+    cal = OnlineCalibrator(T, alpha=0.1)  # slow EWMA
+    layers = tuple(range(4))
+    obs = [
+        StageObservation(
+            ("B", 2), layers, 3.0 * sum(r[("B", 2)] for r in T)
+        )
+    ]
+    cal.observe(obs)
+    assert cal.correction["B"] < 1.5  # EWMA barely moved...
+    cal.rebase(obs)
+    assert cal.correction["B"] == pytest.approx(3.0, rel=1e-9)  # ...rebase did
+
+
+def test_calibrator_ignores_degenerate_observations():
+    T = _matrix(_net(4))
+    cal = OnlineCalibrator(T)
+    cal.observe([StageObservation(("B", 1), (), 1.0)])  # empty stage
+    cal.observe([StageObservation(("B", 1), (0,), 0.0)])  # no time
+    assert cal.correction == {}
+
+
+# --------------------------------------------------------------- detector
+def test_drift_detector_debounces():
+    det = DriftDetector(threshold=0.2, patience=2)
+    assert not det.update(1.0, 1.5)  # first hit: not yet
+    assert not det.update(1.0, 1.1)  # back in band: streak broken
+    assert not det.update(1.0, 1.5)
+    assert det.update(1.0, 1.6)  # two consecutive: trigger
+    assert det.last_deviation == pytest.approx(0.6)
+    det.reset()
+    assert not det.update(1.0, 1.5)
+
+
+# --------------------------------------- deterministic closed loop (sim)
+@pytest.mark.parametrize("drift_core", ["B", "s"])
+def test_adaptive_recovers_from_2x_cluster_slowdown(drift_core):
+    """ISSUE 2 acceptance (throughput half): 2x slowdown of one cluster,
+    the loop re-plans and recovers >= 80% of the oracle throughput —
+    simulator-backed, SimulatedClock, fully deterministic."""
+    descs = _net(12)
+    T = _matrix(descs)
+    plan0 = pipe_it_search(12, PLAT, T, mode="best")
+    clock = SimulatedClock()
+    env = SimulatedServing(T, PLAT, clock=clock)
+    ctrl = AdaptiveController(prior=T, plan=plan0, platform=PLAT)
+
+    run_adaptive_loop(ctrl, env, rounds=2)  # settled: no spurious swaps
+    assert ctrl.swaps == 0
+
+    env.inject_drift(drift_core, 2.0)
+    tp_static = env.throughput(plan0)
+    run_adaptive_loop(ctrl, env, rounds=8)
+
+    oracle = pipe_it_search(12, PLAT, env.truth.T, mode="best")
+    tp_oracle = env.throughput(oracle)
+    tp_adaptive = env.throughput(ctrl.plan)
+    assert ctrl.swaps >= 1
+    assert tp_adaptive >= 0.80 * tp_oracle
+    assert tp_adaptive > tp_static
+    # virtual time advanced, deterministic across runs
+    assert clock.now() > 0
+    clock2 = SimulatedClock()
+    env2 = SimulatedServing(T, PLAT, clock=clock2)
+    ctrl2 = AdaptiveController(prior=T, plan=plan0, platform=PLAT)
+    run_adaptive_loop(ctrl2, env2, rounds=2)
+    env2.inject_drift(drift_core, 2.0)
+    run_adaptive_loop(ctrl2, env2, rounds=8)
+    assert ctrl2.plan == ctrl.plan and clock2.now() == clock.now()
+
+
+def test_controller_rejects_unprofitable_swap():
+    """A uniform slowdown of EVERYTHING changes no relative balance: the
+    detector fires but the re-planned throughput gain is ~1, so the
+    controller must keep the current plan (swap has a cost)."""
+    descs = _net(10)
+    T = _matrix(descs)
+    plan0 = pipe_it_search(10, PLAT, T, mode="best")
+    env = SimulatedServing(T, PLAT)
+    ctrl = AdaptiveController(prior=T, plan=plan0, platform=PLAT)
+    env.inject_drift("B", 2.0)
+    env.inject_drift("s", 2.0)
+    run_adaptive_loop(ctrl, env, rounds=6)
+    assert ctrl.swaps == 0
+    assert any(not e.swapped for e in ctrl.history)  # re-planned, rejected
+
+
+# ----------------------------------------------------- live hot-swap path
+def test_hot_swap_drops_nothing_outputs_equal(tiny):
+    """ISSUE 2 acceptance (runtime half): swap mid-stream; every ticket
+    resolves (none dropped) and outputs equal the single-stage baseline."""
+    g, params, images, ref, T, plan_a = tiny
+    plan_b = pipe_it_search(
+        len(g.descriptors()), PLAT, scale_core_type(T, "B", 2.0), mode="best"
+    )
+    assert plan_b != plan_a  # the swap must actually change the allocation
+    srv = PipelineServer(g, params, plan_a, batch_size=2, flush_timeout_s=0.005)
+    srv.start()
+    srv.warmup()
+    tickets = []
+
+    def feed():
+        for img in images:
+            tickets.append(srv.submit(img))
+            time.sleep(0.002)
+
+    feeder = threading.Thread(target=feed)
+    feeder.start()
+    time.sleep(0.02)
+    srv.swap_plan(plan_b)  # mid-stream: old epoch drains, new epoch serves
+    feeder.join()
+    outs = [t.result(timeout=60.0) for t in tickets]
+    srv.stop()
+    assert len(outs) == len(images)  # nothing dropped
+    assert srv.epoch == 1
+    assert srv.plan == plan_b
+    assert srv.metrics.completed == len(images)
+    assert len(srv.metrics.stage_history) == 1  # old epoch archived
+    for a, b in zip(ref, outs):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_nonblocking_submit_during_swap_sheds_load(tiny):
+    """While swap_plan holds the ingress seal (draining the old epoch),
+    submit(block=False) must raise Backpressure immediately — the
+    non-blocking contract survives hot-swaps — and every ticket admitted
+    before the seal still completes."""
+    g, params, images, ref, T, plan0 = tiny
+    truth = DriftingMatrix(T)
+    srv = PipelineServer(
+        g, params, plan0, batch_size=1, flush_timeout_s=0.0, queue_depth=4,
+        stage_fn_builder=delayed_stage_fn_builder(truth, scale=500.0),
+    )
+    srv.start()
+    tickets = [srv.submit(img) for img in images[:4]]  # in-flight backlog
+    swap_done = threading.Event()
+
+    def do_swap():
+        srv.swap_plan(plan0, warmup=False)  # slow drain: sleepy stages
+        swap_done.set()
+
+    t = threading.Thread(target=do_swap, daemon=True)
+    t.start()
+    deadline = time.perf_counter() + 30.0
+    while not srv._submit_lock.locked() and time.perf_counter() < deadline:
+        time.sleep(0.001)
+    assert srv._submit_lock.locked()  # the seal is on: drain in progress
+    t0 = time.perf_counter()
+    with pytest.raises(Backpressure):
+        srv.submit(images[4], block=False)
+    assert time.perf_counter() - t0 < 1.0  # shed immediately, no stall
+    t.join(timeout=60.0)
+    assert swap_done.is_set()
+    for tk in tickets:  # sealed-out traffic was never dropped
+        assert tk.result(timeout=60.0) is not None
+    srv.stop()
+
+
+def test_swap_plan_validates_partition(tiny):
+    g, params, images, ref, T, plan = tiny
+    srv = PipelineServer(g, params, plan, batch_size=2)
+    bad = pipe_it_search(3, PLAT, T[:3], mode="merge")  # wrong layer count
+    with pytest.raises(ValueError):
+        srv.swap_plan(bad, warmup=False)
+
+
+def test_swap_plan_after_stop_raises(tiny):
+    g, params, images, ref, T, plan = tiny
+    srv = PipelineServer(g, params, plan, batch_size=2)
+    srv.start()
+    srv.stop()
+    with pytest.raises(ServerClosed):
+        srv.swap_plan(plan, warmup=False)
+
+
+def test_swap_before_start_takes_effect_on_start(tiny):
+    g, params, images, ref, T, plan_a = tiny
+    plan_b = pipe_it_search(
+        len(g.descriptors()), PLAT, scale_core_type(T, "s", 2.0), mode="best"
+    )
+    srv = PipelineServer(g, params, plan_a, batch_size=2, flush_timeout_s=0.005)
+    srv.swap_plan(plan_b, warmup=False)  # cold swap: no workers yet
+    assert srv.epoch == 1
+    with srv:
+        outs = srv.run(images[:6])["outputs"]
+    for a, b in zip(ref, outs):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------- monitor on a live fake board
+def test_monitor_closed_loop_on_live_server(tiny):
+    """Drive the monitor by hand (no timing races): a fake-stage board
+    (real outputs + ground-truth delays) drifts 2x on the Big cluster;
+    the sampled loop must calibrate, detect, re-plan and hot-swap, and
+    the stream's outputs must remain correct throughout."""
+    g, params, images, ref, T, plan0 = tiny
+    truth = DriftingMatrix(T)
+    srv = PipelineServer(
+        g,
+        params,
+        plan0,
+        batch_size=1,
+        flush_timeout_s=0.0,
+        queue_depth=4,
+        stage_fn_builder=delayed_stage_fn_builder(truth, scale=100.0),
+    )
+    cfg = AdaptiveConfig(alpha=0.5, threshold=0.3, patience=1, min_gain=1.02,
+                         min_items=4)
+    ctrl = AdaptiveController(prior=T, plan=plan0, platform=PLAT, config=cfg)
+    monitor = AdaptiveMonitor(srv, ctrl)  # not started: stepped manually
+    outs = []
+    with srv:
+        srv.warmup()  # compile now: a compile-inflated first window would
+        # teach the calibrator a baseline ABOVE the drifted truth
+        outs.extend(srv.run(images[:8])["outputs"])
+        monitor.step()  # absorbs static bias (compute time atop the delays)
+        base_swaps = ctrl.swaps
+        truth.scale("B", 2.0)  # the board's Big cluster slows 2x
+        for _ in range(6):
+            outs.extend(srv.run(images[:8])["outputs"])
+            if monitor.step() is not None:
+                break
+        assert ctrl.swaps > base_swaps  # drift produced a real hot-swap
+        outs.extend(srv.run(images[:8])["outputs"])  # post-swap traffic
+    for i, o in enumerate(outs):
+        np.testing.assert_allclose(
+            np.asarray(ref[i % 8]), np.asarray(o), rtol=1e-4, atol=1e-5
+        )
+
+
+def test_monitor_failure_surfaces_on_stop(tiny):
+    """If the control loop dies on repeated errors, stop() must raise —
+    adaptation silently degrading to static planning is not acceptable."""
+    g, params, images, ref, T, plan0 = tiny
+    srv = PipelineServer(g, params, plan0, batch_size=2)
+    ctrl = AdaptiveController(
+        prior=T, plan=plan0, platform=PLAT,
+        config=AdaptiveConfig(interval_s=0.01),
+    )
+    monitor = AdaptiveMonitor(srv, ctrl)
+
+    def boom():
+        raise RuntimeError("control-loop boom")
+
+    monitor.sample = boom
+    srv.monitor = monitor
+    srv.start()
+    monitor.start()
+    deadline = time.perf_counter() + 15.0
+    while monitor.error is None and time.perf_counter() < deadline:
+        time.sleep(0.01)
+    assert monitor.error is not None
+    with pytest.raises(ServingError, match="adaptive monitor failed"):
+        srv.stop()
+
+
+@pytest.mark.slow
+def test_serve_adaptive_end_to_end(tiny):
+    """Fully threaded serve(adaptive=True): the background monitor alone
+    must detect a mid-stream 2x drift and hot-swap, with no drops."""
+    g, params, images, ref, T, plan0 = tiny
+    truth = DriftingMatrix(T)
+    server = serve(
+        g,
+        params=params,
+        platform=PLAT,
+        time_matrix=T,
+        batch_size=1,
+        flush_timeout_s=0.0,
+        queue_depth=4,
+        stage_fn_builder=delayed_stage_fn_builder(truth, scale=100.0),
+        adaptive=True,
+        adaptive_config=AdaptiveConfig(
+            alpha=0.5, threshold=0.3, patience=1, min_gain=1.02,
+            interval_s=0.1, min_items=4,
+        ),
+    )
+    try:
+        server.run(images)  # settle + give the monitor a calibration window
+        time.sleep(0.3)
+        truth.scale("B", 2.0)
+        swaps0 = server.monitor.controller.swaps
+        deadline = time.perf_counter() + 30.0
+        outs = []
+        while (
+            server.monitor.controller.swaps == swaps0
+            and time.perf_counter() < deadline
+        ):
+            outs = server.run(images)["outputs"]
+        assert server.monitor.controller.swaps > swaps0
+        outs = server.run(images)["outputs"]  # post-swap correctness
+        for a, b in zip(ref, outs):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5
+            )
+    finally:
+        server.stop()
+    assert server.monitor.controller.swaps > swaps0

@@ -14,6 +14,7 @@ from repro.core import (
     design_space_size,
     enumerate_pipelines,
     exhaustive_search,
+    exhaustive_two_way_split,
     find_split,
     hikey970,
     num_pipelines,
@@ -88,6 +89,71 @@ def test_find_split_everything_stays_when_right_is_slow():
     T = PRED.time_matrix(d)
     left, right = find_split([0], T, ("B", 4), ("s", 1))
     assert left == (0,) and right == ()
+
+
+# ----------------------------------- Algorithm 1 properties (ISSUE 2)
+# Random per-(layer, config) times — harsher than speed-scaled matrices:
+# minmax optimality must hold for ANY positive time matrix.
+
+_VOCAB = PLAT.stage_vocabulary()
+
+
+def _random_time_matrix(rng, n):
+    return [
+        {stage: float(rng.uniform(1e-5, 1.0)) for stage in _VOCAB}
+        for _ in range(n)
+    ]
+
+
+def _check_split_properties(T, stage_a, stage_b):
+    layers = list(range(len(T)))
+    left, right = find_split(layers, T, stage_a, stage_b, rule="minmax")
+    assert list(left) + list(right) == layers  # contiguous partition
+    achieved = max(
+        stage_time(T, left, stage_a), stage_time(T, right, stage_b)
+    )
+    _, optimal = exhaustive_two_way_split(layers, T, stage_a, stage_b)
+    # minmax is the exhaustive optimum (unimodality of the max)
+    assert achieved == pytest.approx(optimal, rel=1e-9)
+    # the paper's conservative rule can stop short but never does better
+    pl, pr = find_split(layers, T, stage_a, stage_b, rule="paper")
+    assert list(pl) + list(pr) == layers
+    paper_t = max(stage_time(T, pl, stage_a), stage_time(T, pr, stage_b))
+    assert paper_t >= achieved - 1e-12 * max(achieved, 1.0)
+
+
+@pytest.mark.parametrize("seed", range(30))
+def test_minmax_split_optimal_paper_never_better_seeded(seed):
+    """Deterministic fallback of the hypothesis property below — runs
+    even where hypothesis is only the conftest stub."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 14))
+    T = _random_time_matrix(rng, n)
+    ia, ib = rng.integers(0, len(_VOCAB), size=2)
+    _check_split_properties(T, _VOCAB[int(ia)], _VOCAB[int(ib)])
+
+
+@settings(max_examples=80, deadline=None)
+@given(
+    st.lists(
+        st.lists(
+            st.floats(min_value=1e-6, max_value=1e3, allow_nan=False,
+                      allow_infinity=False),
+            min_size=len(_VOCAB),
+            max_size=len(_VOCAB),
+        ),
+        min_size=1,
+        max_size=14,
+    ),
+    st.integers(min_value=0, max_value=len(_VOCAB) - 1),
+    st.integers(min_value=0, max_value=len(_VOCAB) - 1),
+)
+def test_minmax_split_optimal_paper_never_better(rows, ia, ib):
+    """Property (ISSUE 2): on random time matrices, rule="minmax" matches
+    the exhaustive optimal contiguous two-way split, and rule="paper" is
+    never better than minmax."""
+    T = [dict(zip(_VOCAB, row)) for row in rows]
+    _check_split_properties(T, _VOCAB[ia], _VOCAB[ib])
 
 
 # ------------------------------------------------------------- Algorithm 2

@@ -1,11 +1,16 @@
 """Discrete-event pipeline simulator vs. the steady-state formula (Eq. 12)."""
+import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.core import (
     LayerTimePredictor,
     Pipeline,
     PipelinePlan,
+    SimulatedClock,
+    contiguous_allocation,
     conv_descriptor,
+    enumerate_pipelines,
     hikey970,
     simulate,
 )
@@ -56,3 +61,58 @@ def test_single_stage_throughput_is_service_rate():
     plan = PipelinePlan(Pipeline((("B", 4),)), (tuple(range(12)),))
     res = simulate(plan, T, PLAT, n_images=50)
     assert res.steady_throughput == pytest.approx(1.0 / plan.stage_times(T)[0], rel=1e-6)
+
+
+# ---------------------------------- randomized cross-validation (ISSUE 2)
+# The paper's Eq. 12 claims the steady-state rate is 1 / max_i T_{L_i}^{P_i}
+# regardless of where the boundary transfers sit (they add fill latency,
+# not period).  The simulator must reproduce that on arbitrary plans.
+
+def _random_case(rng):
+    n = int(rng.integers(3, 16))
+    T = [
+        {stage: float(rng.uniform(1e-4, 1.0)) for stage in PLAT.stage_vocabulary()}
+        for _ in range(n)
+    ]
+    p = int(rng.integers(2, min(5, n) + 1))
+    pipes = enumerate_pipelines(PLAT, p)
+    pipeline = pipes[int(rng.integers(0, len(pipes)))]
+    cuts = sorted(rng.choice(np.arange(1, n), size=p - 1, replace=False).tolist())
+    plan = PipelinePlan(pipeline, contiguous_allocation(cuts, n, p))
+    # mix of free (same-cluster / tiny) and heavy cross-cluster transfers
+    boundary = [int(rng.integers(0, 64 * 1024 * 1024)) for _ in range(p - 1)]
+    return T, plan, boundary
+
+
+def _check_matches_eq12(T, plan, boundary):
+    res = simulate(plan, T, PLAT, n_images=300, boundary_bytes=boundary)
+    assert res.steady_throughput == pytest.approx(plan.throughput(T), rel=1e-6)
+    # fill/drain and transfer latency can only hurt the overall rate
+    assert res.overall_throughput <= res.steady_throughput * (1 + 1e-9)
+    assert res.makespan_s >= plan.bottleneck(T) * 300 * (1 - 1e-9)
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_sim_matches_eq12_randomized_plans_seeded(seed):
+    """Cross-validation: steady-state simulate() agrees with Eq. 12 on
+    randomized plans, including nonzero boundary-transfer cases."""
+    T, plan, boundary = _random_case(np.random.default_rng(seed))
+    _check_matches_eq12(T, plan, boundary)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000_000))
+def test_sim_matches_eq12_randomized_plans(seed):
+    T, plan, boundary = _random_case(np.random.default_rng(seed))
+    _check_matches_eq12(T, plan, boundary)
+
+
+def test_simulated_clock_is_monotone_and_thread_safe_interface():
+    clock = SimulatedClock(start=1.0)
+    assert clock.now() == 1.0
+    clock.advance(0.5)
+    clock.sleep(0.25)
+    clock.sleep(-1.0)  # sleep clamps, never rewinds
+    assert clock.now() == pytest.approx(1.75)
+    with pytest.raises(ValueError):
+        clock.advance(-0.1)

@@ -139,6 +139,67 @@ def test_backpressure_nonblocking_submit(setup):
         srv.submit(images[1], block=False)
 
 
+def test_backpressure_blocking_submit_waits_instead_of_dropping(setup):
+    """A blocking submit against a full pipeline must WAIT (backpressure),
+    not drop — and must complete once capacity frees up."""
+    import threading
+
+    g, params, images, plan = setup
+    srv = PipelineServer(g, params, plan, batch_size=1, flush_timeout_s=0.0,
+                         queue_depth=1)
+    srv._started = True  # fill ingress without live workers draining it
+    first = srv.submit(images[0], block=False)
+    blocked = []
+
+    def blocked_submit():
+        blocked.append(srv.submit(images[1], block=True))
+
+    t = threading.Thread(target=blocked_submit, daemon=True)
+    t.start()
+    time.sleep(0.2)
+    assert t.is_alive() and not blocked  # waiting, not dropped/raised
+    srv._spawn_workers()  # capacity appears: the blocked submit completes
+    t.join(timeout=30.0)
+    assert blocked
+    for ticket in (first, blocked[0]):
+        assert ticket.result(timeout=30.0) is not None
+    srv.stop()
+
+
+def test_submit_timeout_raises_backpressure(setup):
+    g, params, images, plan = setup
+    srv = PipelineServer(g, params, plan, batch_size=1, flush_timeout_s=0.0,
+                         queue_depth=1)
+    srv._started = True  # never drains
+    srv.submit(images[0], block=False)
+    t0 = time.perf_counter()
+    with pytest.raises(Backpressure):
+        srv.submit(images[1], timeout=0.1)
+    assert time.perf_counter() - t0 >= 0.09  # waited the timeout out first
+
+
+def test_stage0_crash_fails_queued_ingress_tickets(setup):
+    """Images still queued in the ingress when a worker dies must have
+    their tickets failed (the _fail drain path), not stranded forever."""
+    g, params, images, plan = setup
+    srv = PipelineServer(g, params, plan, batch_size=1, flush_timeout_s=0.0,
+                         queue_depth=2)
+
+    def boom(p, env):
+        raise RuntimeError("stage0 boom")
+
+    srv._stage_fns[0] = boom
+    srv._started = True  # queue up a backlog before any worker runs
+    tickets = [srv.submit(img, block=False) for img in images[:2]]
+    srv._spawn_workers()
+    for t in tickets:
+        with pytest.raises(ServingError):
+            t.result(timeout=30.0)
+    with pytest.raises(RuntimeError):
+        srv.stop()
+    assert not any(t.is_alive() for t in srv._threads)
+
+
 def test_submit_rejects_multi_row_arrays(setup):
     g, params, images, plan = setup
     with PipelineServer(g, params, plan, batch_size=2) as srv:
