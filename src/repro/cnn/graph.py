@@ -199,21 +199,44 @@ class Graph:
         return params
 
     # ----------------------------------------------------------- execution
-    def _apply_node(self, n: Node, params, env, gemm_fn=None):
+    def _apply_node(self, n: Node, params, env, gemm_fn=None, backend=None):
+        """Execute one node.  ``backend`` (a resolved
+        :class:`repro.kernels.backend.KernelBackend`) routes the major
+        layers through the selected kernel backend and may fuse the
+        node's ReLU into the kernel epilogue; ``gemm_fn`` is the legacy
+        injection point (quantized closures, tests) and wins when set."""
         ins = [env[i] for i in n.inputs]
         x = ins[0]
+        act_done = False
+        relu = n.attrs.get("act") == "relu"
         if n.kind == "conv":
             p = params[n.name]
-            y = L.conv2d(
-                x, p["w"], p["b"], stride=n.attrs["stride"], pad=n.attrs["pad"],
-                groups=n.attrs.get("groups", 1), gemm_fn=gemm_fn,
-            )
+            if backend is not None and gemm_fn is None:
+                y, act_done = backend.conv2d(
+                    n.name, x, p["w"], p["b"], stride=n.attrs["stride"],
+                    pad=n.attrs["pad"], groups=n.attrs.get("groups", 1),
+                    relu=relu,
+                )
+            else:
+                y = L.conv2d(
+                    x, p["w"], p["b"], stride=n.attrs["stride"], pad=n.attrs["pad"],
+                    groups=n.attrs.get("groups", 1), gemm_fn=gemm_fn,
+                )
         elif n.kind == "depthwise":
             p = params[n.name]
-            y = L.depthwise_conv2d(x, p["w"], p["b"], stride=n.attrs["stride"], pad=n.attrs["pad"])
+            if backend is not None and gemm_fn is None:
+                y, act_done = backend.depthwise(
+                    n.name, x, p["w"], p["b"], stride=n.attrs["stride"],
+                    pad=n.attrs["pad"], relu=relu,
+                )
+            else:
+                y = L.depthwise_conv2d(x, p["w"], p["b"], stride=n.attrs["stride"], pad=n.attrs["pad"])
         elif n.kind == "fc":
             p = params[n.name]
-            y = L.dense(x, p["w"], p["b"], gemm_fn=gemm_fn)
+            if backend is not None and gemm_fn is None:
+                y, act_done = backend.dense(n.name, x, p["w"], p["b"], relu=relu)
+            else:
+                y = L.dense(x, p["w"], p["b"], gemm_fn=gemm_fn)
         elif n.kind == "pool_max":
             y = L.max_pool(x, n.attrs["window"], n.attrs["stride"], n.attrs["pad"])
         elif n.kind == "pool_avg":
@@ -232,7 +255,7 @@ class Graph:
             y = x[..., n.attrs["lo"] : n.attrs["hi"]]
         else:
             raise ValueError(n.kind)
-        if n.attrs.get("act") == "relu":
+        if relu and not act_done:
             y = L.relu(y)
         return y
 
@@ -243,13 +266,23 @@ class Graph:
         start: int,
         stop: int,
         gemm_fn=None,
+        backend=None,
     ) -> Dict[str, jnp.ndarray]:
         """Execute nodes[start:stop] on the live-tensor environment ``env``
         and return the pruned environment (only tensors still needed by
-        nodes >= stop survive — this is what crosses a stage boundary)."""
+        nodes >= stop survive — this is what crosses a stage boundary).
+
+        ``backend`` selects the kernel execution backend per node — a
+        name from ``repro.kernels.backend.BACKENDS``, a per-node mapping,
+        a callable, or an already-resolved ``KernelBackend``."""
+        from ..kernels.backend import resolve_backend
+
+        backend = resolve_backend(backend)
         env = dict(env)
         for n in self.nodes[start:stop]:
-            env[n.name] = self._apply_node(n, params, env, gemm_fn=gemm_fn)
+            env[n.name] = self._apply_node(
+                n, params, env, gemm_fn=gemm_fn, backend=backend
+            )
         needed = set()
         for n in self.nodes[stop:]:
             needed.update(n.inputs)
@@ -259,8 +292,10 @@ class Graph:
             env = {self.nodes[-1].name: env[self.nodes[-1].name]}
         return env
 
-    def apply(self, params, x: jnp.ndarray, gemm_fn=None) -> jnp.ndarray:
-        env = self.apply_range(params, {"input": x}, 0, len(self.nodes), gemm_fn=gemm_fn)
+    def apply(self, params, x: jnp.ndarray, gemm_fn=None, backend=None) -> jnp.ndarray:
+        env = self.apply_range(
+            params, {"input": x}, 0, len(self.nodes), gemm_fn=gemm_fn, backend=backend
+        )
         return env[self.nodes[-1].name]
 
     # -------------------------------------------------- stage partitioning

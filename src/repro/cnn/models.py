@@ -149,19 +149,39 @@ def squeezenet() -> Graph:
     return g
 
 
+def vgg16() -> Graph:
+    """VGG-16 (not in the paper's Table I; added as the kernel backend's
+    conv-dominated acceptance workload — 13 uniform 3x3 convs + 3 fc)."""
+    g = Graph("vgg16", (224, 224, 3))
+    x = "input"
+    plan = [(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)]
+    for bi, (ch, reps) in enumerate(plan, start=1):
+        for ri in range(1, reps + 1):
+            x = g.conv(f"conv{bi}_{ri}", x, ch, 3, pad=1)
+        x = g.pool_max(f"pool{bi}", x, 2, 2)
+    f1 = g.fc("fc6", x, 4096, act="relu")
+    f2 = g.fc("fc7", f1, 4096, act="relu")
+    f3 = g.fc("fc8", f2, 1000)
+    g.softmax("prob", f3)
+    return g
+
+
 MODELS: Dict[str, Callable[[], Graph]] = {
     "alexnet": alexnet,
     "googlenet": googlenet,
     "mobilenet": mobilenet,
     "resnet50": resnet50,
     "squeezenet": squeezenet,
+    "vgg16": vgg16,
 }
 
-# Paper Table I major-node counts, used as a structural regression test.
+# Paper Table I major-node counts, used as a structural regression test
+# (vgg16 is beyond Table I: 13 conv + 3 fc).
 PAPER_MAJOR_COUNTS = {
     "alexnet": 11,
     "googlenet": 58,
     "mobilenet": 28,
     "resnet50": 54,
     "squeezenet": 26,
+    "vgg16": 16,
 }

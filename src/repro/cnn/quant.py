@@ -69,3 +69,20 @@ def make_quant_gemm_fn(qparams_entry):
     s = qparams_entry["scale"]
     z = qparams_entry["zp"]
     return lambda a, _ignored: qgemm(a, qw, s, z)
+
+
+def make_quant_conv_fn(qparams_entry, *, stride: int = 1, pad: int = 0,
+                       relu: bool = False, pallas: bool = False):
+    """The fused-conv counterpart of :func:`make_quant_gemm_fn`: a closure
+    ``x -> y`` executing one quantized conv layer with the requant step
+    fused into the kernel epilogue (`kernels/conv_fused.py`).
+
+    ``pallas=True`` runs the Pallas kernel (TPU; interpret elsewhere per
+    kernels/config.py); the default is the fused XLA lowering, which is
+    what serves off-TPU."""
+    from ..kernels.conv_fused import qconv2d_fused, qfused_route_ref
+
+    qw, s, z = qparams_entry["qw"], qparams_entry["scale"], qparams_entry["zp"]
+    b, shape = qparams_entry["b"], tuple(qparams_entry["shape"])
+    fn = qconv2d_fused if pallas else qfused_route_ref
+    return lambda x: fn(x, qw, s, z, b, shape, stride=stride, pad=pad, relu=relu)

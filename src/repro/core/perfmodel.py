@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Iterable, List, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -76,9 +76,18 @@ class MultiCoreModel:
     def predict(self, dims: GemmDims, cores: int, speed: float = 1.0) -> float:
         """Execution time of one layer's GEMM on ``cores`` homogeneous cores
         of relative speed ``speed`` (equal split, Eq. 8)."""
+        return self.predict_from_t1(dims, self.single.predict(dims), cores, speed)
+
+    def predict_from_t1(
+        self, dims: GemmDims, t1: float, cores: int, speed: float = 1.0
+    ) -> float:
+        """Eq. 6-8 scaling from an arbitrary single-stream time ``t1``
+        (reference-speed seconds).  This is how *measured* kernel times —
+        e.g. the autotuner's per-layer route measurements — replace the
+        Eq. 5 regression while keeping the paper's multi-core model."""
         if cores < 1:
             raise ValueError("cores must be >= 1")
-        t1 = self.single.predict(dims) / speed
+        t1 = t1 / speed
         a1, a2, a3 = self.alpha
         n_it = self.n_iter(dims)
         t_iter = (t1 - a1) / n_it + a2 / speed
@@ -118,13 +127,30 @@ class LayerTimePredictor:
 
     ``T[l][(core_type, count)]`` = predicted seconds for layer ``l`` on that
     homogeneous stage configuration (paper §VI-A).
+
+    ``measured`` maps autotuner descriptor keys
+    (:func:`repro.kernels.autotune.descriptor_key`) to measured
+    single-stream route seconds; layers present there use
+    ``predict_from_t1`` (measured t1, Eq. 6-8 core scaling) so the time
+    matrix reflects the kernels that actually serve, and only unmeasured
+    layers fall back to the Eq. 5 regression prior.
     """
 
     model: MultiCoreModel
     platform: HeteroPlatform
+    measured: Optional[Dict[str, float]] = None
 
     def layer_time(self, desc: ConvDescriptor, stage: StageConfig) -> float:
         core_type, count = stage
+        if self.measured:
+            from ..kernels.autotune import descriptor_key
+
+            t1 = self.measured.get(descriptor_key(desc))
+            if t1 is not None:
+                return self.model.predict_from_t1(
+                    desc.gemm_dims(), t1, cores=count,
+                    speed=self.platform.speed(core_type),
+                )
         return self.model.predict(
             desc.gemm_dims(), cores=count, speed=self.platform.speed(core_type)
         )

@@ -1,0 +1,313 @@
+"""Kernel execution backends for the CNN serving hot path.
+
+Every conv/fc node a `Graph` executes routes through one of three
+backends, selectable per node (ISSUE 3 tentpole; mirrors how Synergy
+keys per-layer kernel variants into its throughput model):
+
+``"xla"``
+    The status-quo route: explicit im2col patch matrix + jnp matmul
+    (`cnn/layers.py`).  Reference semantics and the numerical baseline.
+``"pallas"``
+    The *unfused* Pallas kernels (`kernels/gemm.py` behind
+    `kernels/ops.gemm`): im2col stays explicit, the GEMM is tiled.
+    Off-TPU this resolves to the jnp reference GEMM (ops.py policy), so
+    serving never lands on interpret mode by accident.
+``"pallas_fused"``
+    The fused implicit-GEMM kernel (`kernels/conv_fused.py`): block-wise
+    VMEM patches, epilogue in the K-flush, (bm, bn, bk) from the
+    `ConvAutotuner` when one is attached.  Off-TPU it resolves to the
+    fused XLA route (direct conv + fused epilogue — same operation, no
+    patch matrix); shapes `conv_fused.supports` rejects (grouped convs)
+    fall back to the XLA route automatically and are counted in
+    ``fallbacks``.
+
+A backend *spec* is a backend name, a ``{node_name: name}`` mapping
+(missing nodes get ``default``), or a callable ``node_name -> name``.
+`resolve_backend` turns a spec into a `KernelBackend`; everything above
+`Graph._apply_node` (stage builders, engines, server, planner) just
+threads the spec through.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable, Dict, Mapping, Optional, Tuple, Union
+
+import jax.numpy as jnp
+
+from .autotune import ConvAutotuner
+from .config import _ENV, on_tpu
+from .conv_fused import conv2d_fused, fused_route_ref, matmul_fused, supports
+
+BACKENDS = ("xla", "pallas", "pallas_fused")
+
+BackendSpec = Union[str, Mapping[str, str], Callable[[str], str], "KernelBackend"]
+
+
+def _pallas_active(interpret: Optional[bool]) -> bool:
+    """Should the fused *Pallas kernel* itself execute?  On TPU, always;
+    elsewhere only when interpret mode is explicitly requested (argument
+    or REPRO_PALLAS_INTERPRET) — never silently on a serving path.  An
+    explicit ``interpret=False`` pins the XLA route off-TPU even under
+    the env override."""
+    if on_tpu():
+        return True
+    if interpret is not None:
+        return bool(interpret)
+    env = os.environ.get(_ENV, "").strip()
+    return env not in ("", "0", "false", "False")
+
+
+@dataclasses.dataclass
+class KernelBackend:
+    """Per-node kernel routing with automatic XLA fallback.
+
+    ``fallbacks`` records nodes the fused kernel declined (shape it
+    cannot tile) as ``{node_name: reason}`` — the observability hook the
+    grouped/depthwise tests assert on.
+    """
+
+    spec: BackendSpec = "xla"
+    default: str = "xla"
+    tuner: Optional[ConvAutotuner] = None
+    interpret: Optional[bool] = None
+    fallbacks: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if isinstance(self.spec, str) and self.spec not in BACKENDS:
+            raise ValueError(f"unknown backend {self.spec!r}; pick from {BACKENDS}")
+
+    # ------------------------------------------------------------- routing
+    def for_node(self, name: str) -> str:
+        if callable(self.spec):
+            choice = self.spec(name)
+        elif isinstance(self.spec, str):
+            choice = self.spec
+        else:
+            choice = self.spec.get(name, self.default)
+        if choice not in BACKENDS:
+            raise ValueError(f"unknown backend {choice!r} for node {name!r}")
+        return choice
+
+    def _ops_backend(self) -> Optional[str]:
+        # kernels/ops.py vocabulary: None -> platform default (pallas on
+        # TPU, jnp elsewhere); "interpret" -> forced interpret validation.
+        return "interpret" if (self.interpret and not on_tpu()) else None
+
+    def _blocks(self, desc) -> Dict[str, int]:
+        if self.tuner is None:
+            return {}
+        return self.tuner.tune(desc).as_kwargs()
+
+    # -------------------------------------------------------------- convs
+    def conv2d(
+        self,
+        name: str,
+        x: jnp.ndarray,
+        w: jnp.ndarray,
+        b: Optional[jnp.ndarray],
+        *,
+        stride: int = 1,
+        pad: int = 0,
+        groups: int = 1,
+        relu: bool = False,
+    ) -> Tuple[jnp.ndarray, bool]:
+        """Returns ``(y, act_done)`` — ``act_done`` when the backend fused
+        the ReLU into the kernel epilogue."""
+        from ..cnn import layers as L
+
+        choice = self.for_node(name)
+        if choice == "xla":
+            return L.conv2d(x, w, b, stride=stride, pad=pad, groups=groups), False
+        if choice == "pallas":
+            from . import ops
+
+            gemm_fn = lambda a, bm: ops.gemm(a, bm, backend=self._ops_backend())
+            return (
+                L.conv2d(x, w, b, stride=stride, pad=pad, groups=groups, gemm_fn=gemm_fn),
+                False,
+            )
+        # pallas_fused
+        fh, fw, _, _ = w.shape
+        if not supports(fh, fw, stride, groups):
+            # grouped convolution is the only shape supports() rejects today
+            self.fallbacks[name] = f"groups={groups}"
+            return (
+                fused_route_ref(
+                    x, w, b, stride=stride, pad=pad, groups=groups, relu=relu
+                ),
+                True,
+            )
+        if not _pallas_active(self.interpret):
+            # fused XLA lowering of the same operation (off-TPU serving)
+            return (
+                fused_route_ref(x, w, b, stride=stride, pad=pad, relu=relu),
+                True,
+            )
+        desc = self._desc(name, x, w, stride, pad, groups)
+        y = conv2d_fused(
+            x, w, b, stride=stride, pad=pad, relu=relu,
+            interpret=self.interpret, **self._blocks(desc),
+        )
+        return y, True
+
+    def depthwise(
+        self,
+        name: str,
+        x: jnp.ndarray,
+        w: jnp.ndarray,
+        b: Optional[jnp.ndarray],
+        *,
+        stride: int = 1,
+        pad: int = 0,
+        relu: bool = False,
+    ) -> Tuple[jnp.ndarray, bool]:
+        """Depthwise convs keep their native grouped-conv implementation on
+        every backend (ARM-CL special-cases them the same way); under
+        ``pallas_fused`` the epilogue still fuses and the fallback is
+        recorded."""
+        from ..cnn import layers as L
+
+        choice = self.for_node(name)
+        if choice == "pallas_fused":
+            self.fallbacks[name] = "depthwise"
+            return (
+                fused_route_ref(
+                    x, w, b, stride=stride, pad=pad,
+                    groups=x.shape[-1], relu=relu,
+                ),
+                True,
+            )
+        return L.depthwise_conv2d(x, w, b, stride=stride, pad=pad), False
+
+    # -------------------------------------------------------------- dense
+    def dense(
+        self,
+        name: str,
+        x: jnp.ndarray,
+        w: jnp.ndarray,
+        b: Optional[jnp.ndarray],
+        *,
+        relu: bool = False,
+    ) -> Tuple[jnp.ndarray, bool]:
+        from ..cnn import layers as L
+
+        choice = self.for_node(name)
+        if choice == "xla":
+            return L.dense(x, w, b), False
+        if choice == "pallas":
+            from . import ops
+
+            gemm_fn = lambda a, bm: ops.gemm(a, bm, backend=self._ops_backend())
+            return L.dense(x, w, b, gemm_fn=gemm_fn), False
+        x2 = x.reshape(x.shape[0], -1)
+        bias = jnp.zeros((w.shape[1],), jnp.float32) if b is None else b
+        if not _pallas_active(self.interpret):
+            y = x2 @ w + bias  # XLA fuses epilogue into the GEMM
+            if relu:
+                y = jnp.maximum(y, 0.0)
+            return y, True
+        return (
+            matmul_fused(x2, w, bias, relu=relu, interpret=self.interpret),
+            True,
+        )
+
+    # ------------------------------------------------------------- helpers
+    @staticmethod
+    def _desc(name, x, w, stride, pad, groups):
+        from ..core.descriptors import ConvDescriptor
+
+        fh, fw, _, cout = w.shape
+        return ConvDescriptor(
+            name=name, i_w=x.shape[2], i_h=x.shape[1], i_d=x.shape[3],
+            f_w=fw, f_h=fh, ofm=cout, pad=pad, stride=stride, groups=groups,
+        )
+
+
+def resolve_backend(
+    spec: Optional[BackendSpec],
+    *,
+    tuner: Optional[ConvAutotuner] = None,
+    interpret: Optional[bool] = None,
+) -> Optional[KernelBackend]:
+    """None passes through (legacy gemm_fn route stays untouched)."""
+    if spec is None or isinstance(spec, KernelBackend):
+        return spec
+    return KernelBackend(spec=spec, tuner=tuner, interpret=interpret)
+
+
+def finish_act(result: Tuple[jnp.ndarray, bool]) -> jnp.ndarray:
+    """Apply the ReLU a backend did NOT fuse — keeps cross-backend timing
+    and parity comparisons symmetric (same total work on every route)."""
+    y, act_done = result
+    return y if act_done else jnp.maximum(y, 0.0)
+
+
+def measure_graph_routes(
+    graph, kb: KernelBackend, tuner: ConvAutotuner, batch: int = 1
+) -> Dict[str, float]:
+    """Measure (best-of-k, JSON-cached per route name) the serving-route
+    seconds of every major layer of ``graph`` under backend ``kb`` —
+    single image, single stream, the paper's T-matrix measurement unit.
+    Returns {descriptor key: seconds} for exactly the routes this backend
+    selects — the mapping `LayerTimePredictor` consumes.
+    """
+    import jax
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    measured: Dict[str, float] = {}
+
+    def timed(desc, fn):
+        from .autotune import descriptor_key
+
+        route = kb.for_node(desc.name)
+        measured[descriptor_key(desc)] = tuner.measure_route(
+            desc, lambda: jax.block_until_ready(fn()), route=route
+        )
+
+    for desc in graph.descriptors():
+        if desc.kind == "fc":
+            k, m = desc.i_w * desc.i_h * desc.i_d, desc.ofm
+            x = jnp.asarray(rng.standard_normal((batch, k)), jnp.float32)
+            w = jnp.asarray(rng.standard_normal((k, m)) * 0.02, jnp.float32)
+            b = jnp.zeros((m,), jnp.float32)
+            timed(
+                desc,
+                lambda x=x, w=w, b=b, n=desc.name: finish_act(
+                    kb.dense(n, x, w, b, relu=True)
+                ),
+            )
+        elif desc.kind == "depthwise":
+            x = jnp.asarray(
+                rng.standard_normal((batch, desc.i_h, desc.i_w, desc.i_d)), jnp.float32
+            )
+            w = jnp.asarray(
+                rng.standard_normal((desc.f_h, desc.f_w, 1, desc.i_d)) * 0.1, jnp.float32
+            )
+            b = jnp.zeros((desc.i_d,), jnp.float32)
+            timed(
+                desc,
+                lambda x=x, w=w, b=b, d=desc: finish_act(
+                    kb.depthwise(d.name, x, w, b, stride=d.stride, pad=d.pad, relu=True)
+                ),
+            )
+        else:
+            x = jnp.asarray(
+                rng.standard_normal((batch, desc.i_h, desc.i_w, desc.i_d)), jnp.float32
+            )
+            w = jnp.asarray(
+                rng.standard_normal((desc.f_h, desc.f_w, desc.f_d, desc.ofm)) * 0.05,
+                jnp.float32,
+            )
+            b = jnp.zeros((desc.ofm,), jnp.float32)
+            timed(
+                desc,
+                lambda x=x, w=w, b=b, d=desc: finish_act(
+                    kb.conv2d(
+                        d.name, x, w, b, stride=d.stride, pad=d.pad,
+                        groups=d.groups, relu=True,
+                    )
+                ),
+            )
+    return measured

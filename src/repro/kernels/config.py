@@ -1,0 +1,43 @@
+"""Kernel execution defaults shared by every Pallas entry point.
+
+The kernels in this package compile to real TPU code; everywhere else
+(CPU containers, CI) they can only run under the Pallas interpreter,
+which executes the kernel body with jax ops grid-step by grid-step — a
+silent ~100x slowdown if it ever lands on a serving hot path.  Entry
+points therefore default ``interpret`` by platform (interpret only
+off-TPU) instead of hard-coding ``True``; ``REPRO_PALLAS_INTERPRET``
+overrides for debugging compiled-vs-interpreted divergence:
+
+    REPRO_PALLAS_INTERPRET=1   force interpret mode everywhere
+    REPRO_PALLAS_INTERPRET=0   force compiled Pallas (requires TPU)
+
+The serving backends (kernels/backend.py) go one step further and route
+to jnp/XLA equivalents on non-TPU hosts, so interpret mode is reserved
+for validation, never throughput.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+_ENV = "REPRO_PALLAS_INTERPRET"
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret(interpret: Optional[bool] = None) -> bool:
+    """Resolve an entry point's ``interpret`` argument.
+
+    Explicit ``True``/``False`` wins; ``None`` consults the env override,
+    then the platform (compiled on TPU, interpreted elsewhere).
+    """
+    if interpret is not None:
+        return interpret
+    env = os.environ.get(_ENV)
+    if env is not None and env.strip() != "":
+        return env.strip() not in ("0", "false", "False")
+    return not on_tpu()

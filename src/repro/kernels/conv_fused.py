@@ -1,0 +1,403 @@
+"""Fused implicit-GEMM convolution — the serving hot path's kernel.
+
+The unfused conv-as-GEMM route (paper §V-A, `cnn/layers.py`) materializes
+the full im2col patch matrix ``[B*Oh*Ow, Fh*Fw*C]`` in HBM before the
+GEMM reads it back — for a 3x3 conv that is a 9x write+read amplification
+of the input tensor.  This kernel is the *implicit* formulation: each
+GEMM grid step forms its patch block in VMEM from one padded input row
+and contracts it immediately, so the patch matrix never exists in HBM,
+and the epilogue — bias add, ReLU, and the QASYMM8 requant scale of
+`cnn/quant.py` — runs inside the K-flush of the accumulator instead of
+as separate HBM round trips.
+
+Grid: ``(B, Oh, Ow/bm, Cout/bn, Fh * C/bk)`` with the fused K dimension
+(filter row x channel block) innermost so the f32/i32 accumulator tile
+stays resident in VMEM scratch across the whole reduction.  The M tile
+``bm`` spans output columns of one output row (the ARM-CL row-tile ``ts``
+analogue), ``bn`` tiles output channels, ``bk`` tiles input channels;
+(bm, bn, bk) is what `kernels/autotune.py` sweeps.
+
+Block-wise patch formation: for output row ``oh`` and filter row ``fi``
+the kernel loads padded input row ``oh*stride + fi`` (one [Wp, bk] VMEM
+block), takes the ``bm``-column window at ``jm*bm*stride``, and emits the
+``fw`` strided slices whose concatenation is the [bm, fw*bk] patch block
+— feature order (fw, c), matching ``w.reshape(fh, fw, c, cout)`` blocks.
+
+Off-TPU the Pallas kernel only runs under the interpreter (validation,
+~100x), so `fused_route` resolves to the XLA equivalent — a direct
+`lax.conv_general_dilated` with the same fused epilogue, which XLA fuses
+into one kernel and which likewise never materializes a patch matrix.
+Backend selection for serving lives in `kernels/backend.py`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .config import default_interpret
+
+try:  # TPU memory spaces; harmless on CPU interpret mode
+    from jax.experimental.pallas import tpu as pltpu
+
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+
+# --------------------------------------------------------------- kernel body
+def _conv_fused_kernel(
+    x_ref, w_ref, s_ref, b_ref, o_ref, acc_ref,
+    *, fw: int, stride: int, bm: int, n_k: int, relu: bool,
+):
+    k = pl.program_id(4)
+    jm = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    row = x_ref[0, 0]  # [Wp_ext, bk]: padded input row, one channel block
+    bk = row.shape[1]
+    # implicit im2col: the bm-column output window needs input columns
+    # [jm*bm*stride, jm*bm*stride + (bm-1)*stride + fw)
+    seg = jax.lax.dynamic_slice(
+        row, (jm * bm * stride, 0), ((bm - 1) * stride + fw, bk)
+    )
+    cols = [
+        jax.lax.slice(seg, (j, 0), (j + stride * (bm - 1) + 1, bk), (stride, 1))
+        for j in range(fw)
+    ]
+    patch = jnp.concatenate(cols, axis=1)  # [bm, fw*bk], features (fw, c)
+    wblk = w_ref[0].reshape(fw * bk, -1)  # [fw*bk, bn], same (fw, c) order
+    acc_ref[...] += jnp.dot(patch, wblk, preferred_element_type=acc_ref.dtype)
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        y = acc_ref[...].astype(jnp.float32) * s_ref[0] + b_ref[0]
+        if relu:
+            y = jnp.maximum(y, 0.0)
+        o_ref[0, 0] = y.astype(o_ref.dtype)
+
+
+def _pad_axis(x: jnp.ndarray, axis: int, to: int) -> jnp.ndarray:
+    pad = to - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _ceil_to(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+def default_blocks(ow: int, cout: int, cin: int) -> Tuple[int, int, int]:
+    """Untuned (bm, bn, bk) heuristic: whole output rows, 128-lane tiles."""
+    return min(ow, 128), min(_ceil_to(cout, 8), 128), min(_ceil_to(cin, 8), 128)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "fh", "fw", "stride", "block_m", "block_n", "block_k",
+        "relu", "interpret", "out_dtype",
+    ),
+)
+def _conv_fused_call(
+    xp: jnp.ndarray,  # [B, Hp, Wp, C] spatially pre-padded input (any dtype)
+    w4: jnp.ndarray,  # [FH, FW, C, Cout] filter (same dtype domain as xp)
+    scale: jnp.ndarray,  # [Cout] f32 epilogue scale (ones for the f32 path)
+    bias: jnp.ndarray,  # [Cout] f32
+    *,
+    fh: int, fw: int, stride: int,
+    block_m: int, block_n: int, block_k: int,
+    relu: bool, interpret: bool, out_dtype,
+) -> jnp.ndarray:
+    b, hp, wp, c = xp.shape
+    cout = w4.shape[-1]
+    oh = (hp - fh) // stride + 1
+    ow = (wp - fw) // stride + 1
+    bm = min(block_m, ow)
+    bn = min(block_n, _ceil_to(cout, 1))
+    bk = min(block_k, c)
+    n_m, n_n, n_kc = -(-ow // bm), -(-cout // bn), -(-c // bk)
+    n_k = fh * n_kc
+    # pad so every tile is full: channels to bk, filters to (bn, bk), and
+    # the input rows wide enough for the last column tile's window
+    wp_ext = max(wp, (n_m * bm - 1) * stride + fw)
+    xp = _pad_axis(_pad_axis(xp, 3, n_kc * bk), 2, wp_ext)
+    w4 = _pad_axis(_pad_axis(w4, 2, n_kc * bk), 3, n_n * bn)
+    scale2 = _pad_axis(scale.reshape(1, -1).astype(jnp.float32), 1, n_n * bn)
+    bias2 = _pad_axis(bias.reshape(1, -1).astype(jnp.float32), 1, n_n * bn)
+
+    acc_dtype = jnp.int32 if jnp.issubdtype(xp.dtype, jnp.integer) else jnp.float32
+    scratch = (
+        [pltpu.VMEM((bm, bn), acc_dtype)]
+        if _VMEM is not None
+        else [pl.MemorySpace.ANY]
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _conv_fused_kernel,
+            fw=fw, stride=stride, bm=bm, n_k=n_k, relu=relu,
+        ),
+        grid=(b, oh, n_m, n_n, n_k),
+        in_specs=[
+            # one padded input row (block height 1 => element row index),
+            # channel block k % n_kc, at filter row fi = k // n_kc
+            pl.BlockSpec(
+                (1, 1, wp_ext, bk),
+                lambda bi, i, jm, j, k, s=stride: (bi, i * s + k // n_kc, 0, k % n_kc),
+            ),
+            pl.BlockSpec(
+                (1, fw, bk, bn),
+                lambda bi, i, jm, j, k: (k // n_kc, 0, k % n_kc, j),
+            ),
+            pl.BlockSpec((1, bn), lambda bi, i, jm, j, k: (0, j)),
+            pl.BlockSpec((1, bn), lambda bi, i, jm, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bm, bn), lambda bi, i, jm, j, k: (bi, i, jm, j)),
+        out_shape=jax.ShapeDtypeStruct((b, oh, n_m * bm, n_n * bn), out_dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(xp, w4, scale2, bias2)
+    return out[:, :, :ow, :cout]
+
+
+# ------------------------------------------------------------- public entry
+def supports(fh: int, fw: int, stride: int, groups: int = 1) -> bool:
+    """Shapes the fused kernel can tile; everything else falls back to the
+    XLA route (grouped/depthwise convs keep their native implementation)."""
+    return groups == 1 and stride >= 1 and fh >= 1 and fw >= 1
+
+
+def conv2d_fused(
+    x: jnp.ndarray,  # [B, H, W, C]
+    w: jnp.ndarray,  # [FH, FW, C, Cout]
+    b: Optional[jnp.ndarray],
+    *,
+    stride: int = 1,
+    pad: int = 0,
+    relu: bool = False,
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_k: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Fused conv + bias + ReLU via the implicit-GEMM Pallas kernel.
+
+    ``interpret=None`` resolves by platform (kernels/config.py).  Shapes
+    the kernel cannot tile must be routed by the caller (backend.py) to
+    :func:`fused_route_ref`; this entry asserts ``groups == 1``.
+    """
+    fh, fw, c, cout = w.shape
+    assert supports(fh, fw, stride), (fh, fw, stride)
+    ow = (x.shape[2] - fw + 2 * pad) // stride + 1
+    dm, dn, dk = default_blocks(ow, cout, c)
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    bias = jnp.zeros((cout,), jnp.float32) if b is None else b
+    return _conv_fused_call(
+        xp, w, jnp.ones((cout,), jnp.float32), bias,
+        fh=fh, fw=fw, stride=stride,
+        block_m=block_m or dm, block_n=block_n or dn, block_k=block_k or dk,
+        relu=relu, interpret=default_interpret(interpret), out_dtype=x.dtype,
+    )
+
+
+def qconv2d_fused(
+    x: jnp.ndarray,  # [B, H, W, C] float activations
+    qw: jnp.ndarray,  # [FH*FW*C, Cout] uint8 (quant.quantize_graph_params)
+    scale: jnp.ndarray,  # [1, Cout] weight scales
+    zp: jnp.ndarray,  # [1, Cout] weight zero points
+    b: Optional[jnp.ndarray],
+    w_shape: Tuple[int, int, int, int],
+    *,
+    stride: int = 1,
+    pad: int = 0,
+    relu: bool = False,
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_k: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """QASYMM8 conv with the requant step fused into the K-flush.
+
+    Mirrors `quant.qgemm` exactly: activations quantize per-tensor (over
+    the whole batch, as the patch-matrix route does), both operands shift
+    to the zero-point-free int32 domain, the kernel accumulates in int32,
+    and the epilogue applies the merged requant scale ``sa * scale[j]``
+    plus bias (and ReLU) before the single f32 write to HBM.
+    """
+    from ..cnn.quant import quantize_tensor
+
+    fh, fw, c, cout = w_shape
+    assert supports(fh, fw, stride), (fh, fw, stride)
+    qa, sa, za = quantize_tensor(x, axis=None)  # per-tensor, like qgemm
+    xq = qa.astype(jnp.int32) - za.astype(jnp.int32)
+    # spatial zero-padding in the shifted domain == float-zero padding
+    # (float 0 quantizes to exactly za)
+    xqp = jnp.pad(xq, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    wq4 = (qw.astype(jnp.int32) - zp.astype(jnp.int32)).reshape(fh, fw, c, cout)
+    merged = (sa * scale).reshape(-1)  # [Cout]
+    bias = jnp.zeros((cout,), jnp.float32) if b is None else b
+    ow = (x.shape[2] - fw + 2 * pad) // stride + 1
+    dm, dn, dk = default_blocks(ow, cout, c)
+    return _conv_fused_call(
+        xqp, wq4, merged, bias,
+        fh=fh, fw=fw, stride=stride,
+        block_m=block_m or dm, block_n=block_n or dn, block_k=block_k or dk,
+        relu=relu, interpret=default_interpret(interpret), out_dtype=jnp.float32,
+    )
+
+
+# ----------------------------------------------------- fused dense (fc) GEMM
+def _matmul_fused_kernel(a_ref, b_ref, s_ref, c_ref, o_ref, acc_ref, *, n_k, relu):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=acc_ref.dtype)
+
+    @pl.when(k_step == n_k - 1)
+    def _flush():
+        y = acc_ref[...].astype(jnp.float32) * s_ref[0] + c_ref[0]
+        if relu:
+            y = jnp.maximum(y, 0.0)
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "relu", "interpret"),
+)
+def matmul_fused(
+    a: jnp.ndarray,  # [M, K]
+    w: jnp.ndarray,  # [K, N]
+    bias: jnp.ndarray,  # [N]
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    relu: bool = False,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """GEMM with the dense layer's epilogue (bias, ReLU) in the K-flush —
+    the fc-node counterpart of the fused conv kernel."""
+    interpret = default_interpret(interpret)
+    m, k = a.shape
+    _, n = w.shape
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    a_p = _pad_axis(_pad_axis(a, 0, _ceil_to(m, bm)), 1, _ceil_to(k, bk))
+    w_p = _pad_axis(_pad_axis(w, 0, _ceil_to(k, bk)), 1, _ceil_to(n, bn))
+    ones = jnp.ones((1, w_p.shape[1]), jnp.float32)
+    bias2 = _pad_axis(bias.reshape(1, -1).astype(jnp.float32), 1, w_p.shape[1])
+    n_k = a_p.shape[1] // bk
+    grid = (a_p.shape[0] // bm, w_p.shape[1] // bn, n_k)
+    scratch = (
+        [pltpu.VMEM((bm, bn), jnp.float32)]
+        if _VMEM is not None
+        else [pl.MemorySpace.ANY]
+    )
+    out = pl.pallas_call(
+        functools.partial(_matmul_fused_kernel, n_k=n_k, relu=relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((a_p.shape[0], w_p.shape[1]), a.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(a_p, w_p, ones, bias2)
+    return out[:m, :n]
+
+
+# ------------------------------------------------------- XLA fused fallback
+def fused_route_ref(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: Optional[jnp.ndarray],
+    *,
+    stride: int = 1,
+    pad: int = 0,
+    groups: int = 1,
+    relu: bool = False,
+) -> jnp.ndarray:
+    """The fused route's XLA lowering: direct convolution + fused epilogue.
+
+    Semantically identical to the Pallas kernel (same operation, no patch
+    matrix in HBM, single fused epilogue); it is what `pallas_fused`
+    resolves to off-TPU and the fallback for shapes `supports()` rejects.
+
+    1x1 convolutions ARE the GEMM (the patch "matrix" is a reshape), so
+    they skip the convolution lowering entirely: strided-slice + matmul +
+    epilogue, which XLA fuses tighter than its conv path on CPU — the
+    measured win for the 1x1-dominated nets (MobileNet pointwise,
+    SqueezeNet squeeze/expand; BENCH_kernels.json).
+    """
+    if groups == 1 and w.shape[0] == 1 and w.shape[1] == 1 and pad == 0:
+        bsz = x.shape[0]
+        xs = x[:, ::stride, ::stride, :]
+        oh, ow = xs.shape[1], xs.shape[2]
+        y = xs.reshape(-1, xs.shape[-1]) @ w.reshape(w.shape[2], w.shape[3])
+        y = y.reshape(bsz, oh, ow, -1)
+        if b is not None:
+            y = y + b
+        if relu:
+            y = jnp.maximum(y, 0.0)
+        return y
+    y = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), [(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    )
+    if b is not None:
+        y = y + b
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def qfused_route_ref(
+    x: jnp.ndarray,
+    qw: jnp.ndarray,
+    scale: jnp.ndarray,
+    zp: jnp.ndarray,
+    b: Optional[jnp.ndarray],
+    w_shape: Tuple[int, int, int, int],
+    *,
+    stride: int = 1,
+    pad: int = 0,
+    relu: bool = False,
+) -> jnp.ndarray:
+    """XLA lowering of :func:`qconv2d_fused`: the same per-tensor activation
+    quantization, int32 direct convolution in the zero-point-free domain,
+    and merged-scale epilogue — no patch matrix, one fused computation."""
+    from ..cnn.quant import quantize_tensor
+
+    fh, fw, c, cout = w_shape
+    qa, sa, za = quantize_tensor(x, axis=None)
+    xq = qa.astype(jnp.int32) - za.astype(jnp.int32)
+    wq = (qw.astype(jnp.int32) - zp.astype(jnp.int32)).reshape(w_shape)
+    acc = jax.lax.conv_general_dilated(
+        xq, wq, (stride, stride), [(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32,
+    )
+    y = acc.astype(jnp.float32) * (sa * scale).reshape(1, 1, 1, -1)
+    if b is not None:
+        y = y + b
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y

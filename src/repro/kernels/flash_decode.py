@@ -16,10 +16,13 @@ normalizer ``l`` and accumulator across grid steps.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .config import default_interpret
 
 try:
     from jax.experimental.pallas import tpu as pltpu
@@ -77,8 +80,9 @@ def flash_decode(
     length: jnp.ndarray,  # scalar i32: valid cache prefix
     *,
     block_s: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
+    interpret = default_interpret(interpret)
     hq, d = q.shape
     s, _ = k.shape
     bs = min(block_s, s)

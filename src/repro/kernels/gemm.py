@@ -11,10 +11,13 @@ Grid: (M/bm, N/bn, K/bk), K innermost so the accumulator stays resident.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .config import default_interpret
 
 try:  # TPU memory spaces; harmless on CPU interpret mode
     from jax.experimental.pallas import tpu as pltpu
@@ -59,15 +62,17 @@ def gemm(
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """[M,K] @ [K,N] -> [M,N] with VMEM tiling and f32 accumulation.
 
     Block sizes are MXU-aligned multiples of 128 by default; inputs are
     zero-padded up to block multiples (zeros contribute nothing to the
-    reduction).  ``interpret=True`` executes the kernel body in Python on
-    CPU — the validation mode on this container; on a real TPU pass False.
+    reduction).  ``interpret=None`` resolves by platform: compiled on a
+    real TPU, interpreted (kernel body as jax ops, validation only)
+    elsewhere — see kernels/config.py.
     """
+    interpret = default_interpret(interpret)
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)

@@ -12,10 +12,13 @@ block index equal the element row).  Output block: [1, OW, 1, FW, C].
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .config import default_interpret
 
 
 def _im2col_kernel(x_ref, o_ref, *, fw: int, stride: int, ow: int):
@@ -39,9 +42,14 @@ def im2col(
     fw: int,
     stride: int = 1,
     pad: int = 0,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
-    """[H,W,C] -> [OH*OW, FH*FW*C] image matrix (paper Fig. 10)."""
+    """[H,W,C] -> [OH*OW, FH*FW*C] image matrix (paper Fig. 10).
+
+    ``interpret=None`` resolves by platform (compiled on TPU, interpreted
+    elsewhere; see kernels/config.py).
+    """
+    interpret = default_interpret(interpret)
     h, w, c = x.shape
     oh = (h - fh + 2 * pad) // stride + 1
     ow = (w - fw + 2 * pad) // stride + 1

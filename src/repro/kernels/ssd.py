@@ -12,10 +12,13 @@ ref-form below); validated in interpret mode by tests/test_kernels_ssd.py.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .config import default_interpret
 
 try:
     from jax.experimental.pallas import tpu as pltpu
@@ -79,13 +82,14 @@ def ssd(
     C: jnp.ndarray,  # [S, H, N]
     h0: jnp.ndarray,  # [H, N, P]
     chunk: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ):
     """Single-sequence SSD: returns (y [S,H,P], h_final [H,N,P]).
 
     vmap over the batch dimension on top.  S must be padded to a chunk
     multiple by the caller (log_a=0, B=0 padding is exact).
     """
+    interpret = default_interpret(interpret)
     s, h, p = x.shape
     n = B.shape[-1]
     q = min(chunk, s)

@@ -40,7 +40,9 @@ from ..core.pipeline import PipelinePlan
 StageFn = Callable[..., Dict[str, jnp.ndarray]]
 
 
-def build_stage_fns(graph: Graph, plan: PipelinePlan) -> List[StageFn]:
+def build_stage_fns(
+    graph: Graph, plan: PipelinePlan, backend=None
+) -> List[StageFn]:
     """One jitted function per pipeline stage.
 
     Each function executes the stage's contiguous node range against a
@@ -48,11 +50,24 @@ def build_stage_fns(graph: Graph, plan: PipelinePlan) -> List[StageFn]:
     boundary (the activation transfer the platform's CCI/ICI model
     charges for).  The functions are shape-polymorphic over the batch
     dimension — XLA compiles one executable per distinct batch size.
+
+    ``backend`` selects the kernel execution backend for the stage's
+    major layers (``repro.kernels.backend``: "xla", "pallas",
+    "pallas_fused", a per-node mapping/callable, or a resolved
+    ``KernelBackend``).  The spec is resolved ONCE here so tuner state
+    and fallback bookkeeping are shared across stages.
     """
+    from ..kernels.backend import resolve_backend
+
+    kb = resolve_backend(backend)
     fns: List[StageFn] = []
     for start, stop in graph.stage_slices(plan.allocation):
         fns.append(
-            jax.jit(lambda p, env, s=start, e=stop: graph.apply_range(p, env, s, e))
+            jax.jit(
+                lambda p, env, s=start, e=stop: graph.apply_range(
+                    p, env, s, e, backend=kb
+                )
+            )
         )
     return fns
 
@@ -60,10 +75,13 @@ def build_stage_fns(graph: Graph, plan: PipelinePlan) -> List[StageFn]:
 class SingleStageEngine:
     """Baseline: the whole graph as one jitted function (kernel-level)."""
 
-    def __init__(self, graph: Graph, params):
+    def __init__(self, graph: Graph, params, backend=None):
+        from ..kernels.backend import resolve_backend
+
+        kb = resolve_backend(backend)
         self.graph = graph
         self.params = params
-        self._fn = jax.jit(lambda p, x: graph.apply(p, x))
+        self._fn = jax.jit(lambda p, x: graph.apply(p, x, backend=kb))
 
     def warmup(self, x):
         self._fn(self.params, x).block_until_ready()
@@ -81,12 +99,15 @@ class SingleStageEngine:
 class PipelinedGraphEngine:
     """Layer-level pipelined execution of a CNN graph per a PipelinePlan."""
 
-    def __init__(self, graph: Graph, params, plan: PipelinePlan, queue_depth: int = 4):
+    def __init__(
+        self, graph: Graph, params, plan: PipelinePlan,
+        queue_depth: int = 4, backend=None,
+    ):
         self.graph = graph
         self.params = params
         self.plan = plan
         self.queue_depth = queue_depth
-        self._stage_fns = build_stage_fns(graph, plan)
+        self._stage_fns = build_stage_fns(graph, plan, backend=backend)
 
     def warmup(self, x):
         env = {"input": x}

@@ -67,11 +67,24 @@ class AutoPlanner:
         (beyond-paper work_flow-over-all-pipelines, DESIGN.md §2) or
         "best" (both, keep the higher-throughput plan).
     source : where predicted layer times come from (see module docstring).
+    backend : kernel execution backend spec for the stage executables
+        ("xla" | "pallas" | "pallas_fused" | per-node mapping | resolved
+        ``KernelBackend``); threaded into ``build_stage_fns``.
+    measured : {autotuner descriptor key: seconds} route measurements
+        (``measure_graph_routes``); they override the Eq. 5 regression in
+        the predictor (``LayerTimePredictor(measured=...)``) so the time
+        matrix reflects the kernels that actually serve.
+    tuner : a ``repro.kernels.autotune.ConvAutotuner``; fallback source
+        of ``measured`` (all-route merge) when no explicit mapping is
+        given.
     """
 
     platform: HeteroPlatform = dataclasses.field(default_factory=hikey970)
     mode: str = "best"
     source: str = "synthetic"
+    backend: object = None
+    measured: object = None
+    tuner: object = None
 
     def predictor(self) -> LayerTimePredictor:
         if self.source == "synthetic":
@@ -80,7 +93,12 @@ class AutoPlanner:
             model = calibrate()
         else:
             raise ValueError(f"unknown time source {self.source!r}")
-        return LayerTimePredictor(model=model, platform=self.platform)
+        measured = self.measured
+        if measured is None and self.tuner is not None:
+            measured = self.tuner.route_seconds()
+        return LayerTimePredictor(
+            model=model, platform=self.platform, measured=measured
+        )
 
     def time_matrix(self, graph: Graph) -> TimeMatrix:
         """Predicted T[layer][stage_config] for the graph's major layers."""
@@ -119,6 +137,7 @@ class AutoPlanner:
             flush_timeout_s=flush_timeout_s,
             queue_depth=queue_depth,
             stage_fn_builder=stage_fn_builder,
+            backend=self.backend,
         )
         if warmup:
             server.warmup()
@@ -141,6 +160,9 @@ def serve(
     adaptive: bool = False,
     adaptive_config: Optional[AdaptiveConfig] = None,
     stage_fn_builder=None,
+    backend=None,
+    autotune: bool = False,
+    tuner=None,
 ) -> PipelineServer:
     """One call from model name (or Graph) to a running PipelineServer.
 
@@ -150,16 +172,43 @@ def serve(
     hot-swaps the layer allocation when the bottleneck drifts
     (``server.monitor`` holds it; ``server.stop()`` shuts it down).
 
+    ``backend`` selects the kernel execution backend for every stage
+    executable ("xla" | "pallas" | "pallas_fused", or per-node — see
+    :mod:`repro.kernels.backend`).  ``autotune=True`` attaches a
+    :class:`repro.kernels.autotune.ConvAutotuner` (or pass an existing
+    one via ``tuner``): the tuner measures each layer's serving route
+    once (JSON-cached per platform), picks fused block sizes, and the
+    planner's time matrix is built from those measurements instead of
+    the Eq. 5 regression alone — so the DSE balances stages by the
+    kernels that actually run.
+
     >>> server = serve("squeezenet", mode="best", batch_size=8)
     >>> ticket = server.submit(image)
     >>> logits = ticket.result()
     >>> server.stop()
     """
+    from ..kernels.backend import measure_graph_routes, resolve_backend
+
     graph = MODELS[model]() if isinstance(model, str) else model
+    if tuner is None and autotune:
+        from ..kernels.autotune import ConvAutotuner
+
+        tuner = ConvAutotuner()
+    if backend is None and tuner is not None:
+        backend = "xla"  # measurements must reflect the route that serves
+    kb = resolve_backend(backend, tuner=tuner)
+    measured = None
+    if kb is not None and tuner is not None and time_matrix is None:
+        # skipped when the caller pins an explicit time matrix — the
+        # measurements would be dead startup latency
+        measured = measure_graph_routes(graph, kb, tuner)
     planner = AutoPlanner(
         platform=platform if platform is not None else hikey970(),
         mode=mode,
         source=source,
+        backend=kb,
+        measured=measured,
+        tuner=tuner,
     )
     T = planner.time_matrix(graph) if time_matrix is None else time_matrix
     server = planner.build(

@@ -108,6 +108,11 @@ class PipelineServer:
         The adaptive tests inject fake-stage builders here (real outputs
         plus a scripted service delay) so the whole control loop can run
         against known timings.
+    backend : kernel execution backend spec for the stage executables
+        ("xla" | "pallas" | "pallas_fused", a per-node mapping/callable,
+        or a resolved ``repro.kernels.backend.KernelBackend``).  Resolved
+        once and reused across plan swaps; ignored when a custom
+        ``stage_fn_builder`` is injected.
     """
 
     def __init__(
@@ -120,6 +125,7 @@ class PipelineServer:
         flush_timeout_s: float = 0.01,
         queue_depth: int = 2,
         stage_fn_builder=None,
+        backend=None,
     ):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
@@ -129,9 +135,17 @@ class PipelineServer:
         self.batch_size = batch_size
         self.flush_timeout_s = flush_timeout_s
         self.queue_depth = queue_depth
-        self._stage_fn_builder = (
-            stage_fn_builder if stage_fn_builder is not None else build_stage_fns
-        )
+        if stage_fn_builder is None:
+            from ..kernels.backend import resolve_backend
+
+            kb = resolve_backend(backend)
+            self.backend = kb
+            stage_fn_builder = (
+                lambda graph, plan, _kb=kb: build_stage_fns(graph, plan, backend=_kb)
+            )
+        else:
+            self.backend = None
+        self._stage_fn_builder = stage_fn_builder
         self._stage_fns = self._stage_fn_builder(graph, plan)
         n = len(self._stage_fns)
         self._ingress: "queue.Queue" = queue.Queue(maxsize=queue_depth * batch_size)

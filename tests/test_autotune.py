@@ -1,0 +1,177 @@
+"""Autotuner cache behaviour and its calibration hand-off.
+
+Acceptance (ISSUE 3): the cache round-trips — a second tuner on the same
+JSON file reproduces the identical plan with ZERO re-timing — and
+`LayerTimePredictor` consumes autotuner measurements without API breaks.
+"""
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cnn import MODELS
+from repro.core.calibration import synthetic_model
+from repro.core.descriptors import conv_descriptor
+from repro.core.perfmodel import LayerTimePredictor
+from repro.core.platform import hikey970
+from repro.kernels.autotune import (
+    BlockConfig,
+    ConvAutotuner,
+    candidate_blocks,
+    descriptor_key,
+)
+from repro.kernels.backend import measure_graph_routes, resolve_backend
+from repro.serving.planner import AutoPlanner
+
+TINY = conv_descriptor("tiny", 8, 4, 3, 8, stride=1)
+
+
+@pytest.fixture(autouse=True)
+def _hermetic_interpret_env(monkeypatch):
+    """Keep route measurement on the resolved (XLA) route regardless of a
+    user-set REPRO_PALLAS_INTERPRET; sweeps opt in via sweep=True."""
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+    monkeypatch.delenv("REPRO_AUTOTUNE_SWEEP", raising=False)
+    monkeypatch.delenv("REPRO_AUTOTUNE_CACHE", raising=False)
+
+
+def test_descriptor_key_is_geometry_not_name():
+    a = conv_descriptor("conv1_1", 14, 256, 3, 512)
+    b = conv_descriptor("conv1_2", 14, 256, 3, 512)
+    c = conv_descriptor("conv1_3", 14, 256, 3, 256)
+    assert descriptor_key(a) == descriptor_key(b)
+    assert descriptor_key(a) != descriptor_key(c)
+
+
+def test_candidate_blocks_clipped_to_dims():
+    for cfg in candidate_blocks(ow=14, cout=48, cin=20):
+        assert cfg.bm <= 14 and cfg.bn <= 48 and cfg.bk <= 20
+    assert len(candidate_blocks(14, 48, 20)) >= 2  # something to sweep
+
+
+def test_sweep_cache_round_trip_zero_retiming(tmp_path):
+    cache = str(tmp_path / "tune.json")
+    t1 = ConvAutotuner(cache_path=cache, sweep=True, repeats=1, proxy_rows=2)
+    cfg1 = t1.tune(TINY)
+    assert t1.timings_run > 0
+    assert isinstance(cfg1, BlockConfig)
+    entry = t1.entry(TINY)
+    assert entry["swept"] and entry["candidates"] > 0
+
+    # fresh tuner, same cache file: identical plan, zero re-timing
+    t2 = ConvAutotuner(cache_path=cache, sweep=True, repeats=1, proxy_rows=2)
+    cfg2 = t2.tune(TINY)
+    assert cfg2 == cfg1
+    assert t2.timings_run == 0
+
+    with open(cache) as f:
+        data = json.load(f)
+    assert data["version"] == 1
+    assert descriptor_key(TINY) in data["platforms"][jax.default_backend()]
+
+
+def test_route_measurement_cached(tmp_path):
+    cache = str(tmp_path / "tune.json")
+    t = ConvAutotuner(cache_path=cache, sweep=False, repeats=1)
+    calls = []
+    t.measure_route(TINY, lambda: calls.append(1))
+    assert t.timings_run == 1 and len(calls) == 2  # warm + 1 timed rep
+    t.measure_route(TINY, lambda: calls.append(1))
+    assert t.timings_run == 1  # cache hit, fn never called again
+    assert len(calls) == 2
+    t2 = ConvAutotuner(cache_path=cache, sweep=False, repeats=1)
+    assert t2.measure_route(TINY, lambda: (_ for _ in ()).throw(AssertionError)) > 0
+    assert t2.timings_run == 0
+    assert descriptor_key(TINY) in t2.route_seconds()
+
+
+def test_route_measurements_are_keyed_per_backend_route(tmp_path):
+    """An "xla" measurement must never be served as the "pallas_fused"
+    time for the same geometry (they are different kernels)."""
+    t = ConvAutotuner(cache_path=str(tmp_path / "tune.json"), sweep=False, repeats=1)
+    t.measure_route(TINY, lambda: None, route="xla")
+    assert t.measured_route(TINY, "pallas_fused") is None
+    t.measure_route(TINY, lambda: None, route="pallas_fused")
+    assert t.timings_run == 2  # second route re-times
+    assert descriptor_key(TINY) in t.route_seconds("xla")
+    assert descriptor_key(TINY) in t.route_seconds("pallas_fused")
+
+
+def test_route_only_entry_does_not_suppress_block_sweep(tmp_path):
+    """measure_route first (no blocks), then tune(): the sweep must still
+    run and the merged entry keeps both the routes and the blocks."""
+    cache = str(tmp_path / "tune.json")
+    t = ConvAutotuner(cache_path=cache, sweep=True, repeats=1, proxy_rows=2)
+    t.measure_route(TINY, lambda: None, route="xla")
+    before = t.timings_run
+    cfg = t.tune(TINY)
+    assert t.timings_run > before  # the sweep actually ran
+    assert cfg.bm > 0 and cfg.bn > 0 and cfg.bk > 0
+    entry = t.entry(TINY)
+    assert entry["swept"] and "xla" in entry["routes"]
+
+
+def test_predictor_consumes_measured_times():
+    """Measured route seconds replace the Eq. 5 prior; Eq. 6-8 core
+    scaling still applies (predict_from_t1)."""
+    model = synthetic_model()
+    plat = hikey970()
+    desc = conv_descriptor("l0", 14, 64, 3, 64)
+    t_meas = 123e-6
+    pred = LayerTimePredictor(
+        model=model, platform=plat, measured={descriptor_key(desc): t_meas}
+    )
+    stage = plat.stage_vocabulary()[0]
+    got = pred.layer_time(desc, stage)
+    want = model.predict_from_t1(
+        desc.gemm_dims(), t_meas, cores=stage[1], speed=plat.speed(stage[0])
+    )
+    assert got == pytest.approx(want)
+    # an unmeasured layer keeps the regression prior
+    other = conv_descriptor("l1", 28, 32, 5, 96)
+    prior = LayerTimePredictor(model=model, platform=plat)
+    assert pred.layer_time(other, stage) == pytest.approx(
+        prior.layer_time(other, stage)
+    )
+    # single-core, speed-1 measured layer time equals the measurement's
+    # Eq. 6-8 transform of itself with H=1 (sanity: monotone hand-off)
+    one = ("B", 1)
+    if one in plat.stage_vocabulary():
+        assert pred.layer_time(desc, one) == pytest.approx(
+            model.predict_from_t1(desc.gemm_dims(), t_meas, 1, plat.speed("B"))
+        )
+
+
+def test_planner_time_matrix_uses_tuner(tmp_path):
+    """AutoPlanner(tuner=...) builds T from measured routes (no API break:
+    planner without tuner is byte-identical behaviour)."""
+    g = MODELS["squeezenet"]()
+    cache = str(tmp_path / "tune.json")
+    tuner = ConvAutotuner(cache_path=cache, sweep=False, repeats=1)
+    kb = resolve_backend("pallas_fused", tuner=tuner)
+    measure_graph_routes(g, kb, tuner)
+    assert len(tuner.route_seconds()) > 0
+    planner = AutoPlanner(mode="merge", source="synthetic", tuner=tuner)
+    T = planner.time_matrix(g)
+    baseline = AutoPlanner(mode="merge", source="synthetic").time_matrix(g)
+    assert len(T) == len(baseline) == len(g.descriptors())
+    # at least one layer's row must differ (measured host times vs the
+    # synthetic analytical prior) while staying positive and finite
+    diff = any(
+        not math.isclose(T[l][s], baseline[l][s], rel_tol=1e-6)
+        for l in range(len(T))
+        for s in T[l]
+    )
+    assert diff
+    for row in T:
+        for v in row.values():
+            assert v > 0 and math.isfinite(v)
+    # second planner run from the same tuner: zero re-timing
+    before = tuner.timings_run
+    measure_graph_routes(g, kb, tuner)
+    planner.time_matrix(g)
+    assert tuner.timings_run == before
