@@ -141,6 +141,24 @@ def cnn_descriptors(name: str) -> List[ConvDescriptor]:
     return MODELS[name]().descriptors()
 
 
+def tiny_graph(name: str, ch: int):
+    """A 16x16-input 6-major-layer CNN for CI-smoke scales, shared by the
+    multi-model benchmark and example so their --tiny models stay the
+    same shapes (diverging copies would make their numbers incomparable)."""
+    from repro.cnn.graph import Graph
+
+    g = Graph(name, (16, 16, 3))
+    a = g.conv("c1", "input", ch, 3)
+    a = g.conv("c2", a, ch, 3, stride=2)
+    a = g.conv("c3", a, 2 * ch, 1)
+    a = g.pool_max("p1", a, 2, 2)
+    a = g.conv("c4", a, 2 * ch, 3)
+    a = g.gap("gap", a)
+    a = g.fc("fc", a, 10)
+    g.softmax("sm", a)
+    return g
+
+
 def homogeneous_plan(n_layers: int, stage: StageConfig) -> PipelinePlan:
     return PipelinePlan(Pipeline((stage,)), (tuple(range(n_layers)),))
 

@@ -21,6 +21,7 @@ from . import (
     fig11_concavity,
     fig13_quantization,
     kernels_bench,
+    multimodel_serving,
     roofline_report,
     serving_pipeline,
     table3_prediction_error,
@@ -44,6 +45,7 @@ MODULES = [
     table56_configs,
     fig13_quantization,
     serving_pipeline,
+    multimodel_serving,
     adaptive_replan,
     kernels_bench,
     tpu_pipeit_bench,

@@ -6,10 +6,16 @@ Multi-Core Processors", IEEE TCAD 2019.
 from .calibration import apply_correction, scale_core_type
 from .descriptors import ConvDescriptor, GemmDims, conv_descriptor, fc_descriptor
 from .dse import (
+    ModelPlan,
+    PartitionPlan,
+    enumerate_shares,
+    exhaustive_partition,
     exhaustive_search,
     exhaustive_two_way_split,
     find_split,
     merge_stage,
+    partition_objective,
+    partition_search,
     pipe_it_search,
     work_flow,
 )
@@ -33,10 +39,16 @@ __all__ = [
     "scale_core_type",
     "conv_descriptor",
     "fc_descriptor",
+    "ModelPlan",
+    "PartitionPlan",
+    "enumerate_shares",
+    "exhaustive_partition",
     "exhaustive_search",
     "exhaustive_two_way_split",
     "find_split",
     "merge_stage",
+    "partition_objective",
+    "partition_search",
     "pipe_it_search",
     "work_flow",
     "LayerTimePredictor",

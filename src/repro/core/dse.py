@@ -17,11 +17,21 @@ grown stage can keep absorbing, advance past an unhelpful one).
 
 An exhaustive search over (pipeline x contiguous split) is provided for
 small instances; tests use it to bound the heuristic's optimality gap.
+
+Beyond the paper, this module also implements the *two-level* partition
+DSE for multi-model co-serving (:func:`partition_search`): the cluster is
+first partitioned into disjoint core *shares*, one per co-resident model,
+then ``pipe_it_search`` balances each model's layers within its share —
+"partition clusters across models, then partition layers within each
+share".  Assignments are scored by an aggregate objective (weighted sum
+of per-model Eq. 12 throughputs, with per-model SLO throughput floors);
+:func:`exhaustive_partition` is the oracle for small instances.
 """
 from __future__ import annotations
 
+import dataclasses
 import itertools
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 from .pipeline import (
     Allocation,
@@ -244,6 +254,311 @@ def exhaustive_two_way_split(
             best, best_t = (left, right), t
     assert best is not None
     return best, best_t
+
+def _exhaustive_plan(
+    n_layers: int, platform: HeteroPlatform, T: TimeMatrix
+) -> PipelinePlan:
+    """True optimum over EVERY executable plan on ``platform``: all
+    partial-cluster pipelines (``enumerate_pipelines(allow_partial=True)``
+    — the closure of what merge/sweep can emit after dropping empty
+    stages) x every contiguous non-empty layer split, plus every
+    single-stage vocabulary config.  Exponential; the inner oracle of
+    :func:`exhaustive_partition` and of small-instance
+    :func:`partition_search` shares."""
+    best: Optional[PipelinePlan] = None
+    best_tp = -1.0
+    for stage in platform.stage_vocabulary():  # p = 1: any (ct, c) config
+        plan = _plan(Pipeline(stages=(stage,)), (tuple(range(n_layers)),))
+        tp = plan.throughput(T)
+        if tp > best_tp:
+            best, best_tp = plan, tp
+    top = min(platform.total_cores(), n_layers)
+    for p in range(2, top + 1):
+        for pipeline in enumerate_pipelines(platform, p, allow_partial=True):
+            for cuts in itertools.combinations(range(1, n_layers), p - 1):
+                alloc = contiguous_allocation(cuts, n_layers, p)
+                plan = _plan(pipeline, alloc)
+                tp = plan.throughput(T)
+                if tp > best_tp:
+                    best, best_tp = plan, tp
+    assert best is not None
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Two-level partition DSE: clusters across models, layers within each share
+# ---------------------------------------------------------------------------
+
+Share = Tuple[Tuple[str, int], ...]  # ((core_type, count), ...) for one model
+
+#: Relative-shortfall penalty that ranks every SLO-feasible assignment above
+#: every infeasible one while keeping infeasible ones ordered by how close
+#: they come (best-effort under overload).
+SLO_PENALTY = 1e9
+
+
+def _nonneg_compositions(total: int, parts: int) -> List[Tuple[int, ...]]:
+    if parts == 1:
+        return [(total,)]
+    out = []
+    for first in range(total + 1):
+        for rest in _nonneg_compositions(total - first, parts - 1):
+            out.append((first, *rest))
+    return out
+
+
+def enumerate_shares(platform: HeteroPlatform, n_models: int) -> List[Tuple[Share, ...]]:
+    """All ways to partition the platform's clusters into ``n_models``
+    disjoint core shares.
+
+    Every core is assigned to some model (the paper never idles silicon
+    at the cluster level; a model's *inner* DSE may still leave share
+    cores unused) and every model receives at least one core.  Returns,
+    per assignment, one ``((core_type, count), ...)`` share per model —
+    hashable, zero-count entries elided."""
+    if n_models < 1:
+        raise ValueError("need >= 1 model")
+    if n_models > platform.total_cores():
+        raise ValueError(
+            f"{n_models} models cannot each get a core on "
+            f"{platform.total_cores()}-core {platform.name!r}"
+        )
+    per_ct = [
+        _nonneg_compositions(ct.count, n_models) for ct in platform.core_types
+    ]
+    names = [ct.name for ct in platform.core_types]
+    out: List[Tuple[Share, ...]] = []
+    for combo in itertools.product(*per_ct):
+        shares = []
+        for mi in range(n_models):
+            share = tuple(
+                (names[ci], combo[ci][mi])
+                for ci in range(len(names))
+                if combo[ci][mi] > 0
+            )
+            shares.append(share)
+        if all(shares):  # every model got >= 1 core
+            out.append(tuple(shares))
+    return out
+
+
+def partition_objective(
+    throughputs: Sequence[float],
+    weights: Optional[Sequence[float]] = None,
+    slo_rates: Optional[Sequence[float]] = None,
+    fairness: str = "sum",
+) -> float:
+    """Aggregate co-serving score for one cluster-share assignment.
+
+    fairness="sum"     — utilitarian: ``sum_m w_m * tp_m``.  Maximises
+      machine-wide goodput; right when per-model demand is open-ended.
+    fairness="max-min" — egalitarian: ``min_m w_m * tp_m``.  Maximises
+      the worst model's (weighted) rate; right when every model must
+      sustain comparable demand (set ``w_m = 1/demand_m`` to equalise
+      heterogeneous demands).
+
+    Either way, each relative SLO shortfall is charged
+    :data:`SLO_PENALTY` in the returned scalar.  The *searches* rank
+    assignments lexicographically via :func:`_objective_parts` —
+    feasibility first, then least total shortfall, then score — so a
+    feasible assignment beats every infeasible one even when throughputs
+    are large enough to swamp the finite penalty; this scalar is the
+    reported/compared form of that same ordering."""
+    score, shortfall = _objective_parts(
+        throughputs, weights, slo_rates, fairness
+    )
+    return score - SLO_PENALTY * shortfall
+
+
+def _objective_parts(
+    throughputs: Sequence[float],
+    weights: Optional[Sequence[float]],
+    slo_rates: Optional[Sequence[float]],
+    fairness: str,
+) -> Tuple[float, float]:
+    """(score, total relative SLO shortfall) for one assignment."""
+    m = len(throughputs)
+    ws = list(weights) if weights is not None else [1.0] * m
+    slos = list(slo_rates) if slo_rates is not None else [0.0] * m
+    if len(ws) != m or len(slos) != m:
+        raise ValueError("weights/slo_rates must match throughputs")
+    weighted = [w * tp for w, tp in zip(ws, throughputs)]
+    if fairness == "sum":
+        score = sum(weighted)
+    elif fairness == "max-min":
+        score = min(weighted)
+    else:
+        raise ValueError(f"unknown fairness {fairness!r}")
+    shortfall = sum(
+        max(0.0, 1.0 - tp / slo) for tp, slo in zip(throughputs, slos) if slo > 0.0
+    )
+    return score, shortfall
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelPlan:
+    """One model's slice of a partition: its core share and inner plan."""
+
+    name: str
+    share: HeteroPlatform
+    plan: PipelinePlan
+    throughput: float  # predicted Eq. 12 rate on this model's time matrix
+
+    def notation(self) -> str:
+        return f"{self.name}@{self.plan.notation()}"
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionPlan:
+    """A full co-serving assignment: disjoint shares + per-model plans."""
+
+    assignments: Tuple[ModelPlan, ...]
+    objective: float
+    feasible: bool  # every model met its SLO throughput floor
+
+    @property
+    def names(self) -> List[str]:
+        return [a.name for a in self.assignments]
+
+    def __getitem__(self, name: str) -> ModelPlan:
+        for a in self.assignments:
+            if a.name == name:
+                return a
+        raise KeyError(name)
+
+    def throughputs(self) -> Dict[str, float]:
+        return {a.name: a.throughput for a in self.assignments}
+
+    def plans(self) -> Dict[str, PipelinePlan]:
+        return {a.name: a.plan for a in self.assignments}
+
+    def notation(self) -> str:
+        return " | ".join(a.notation() for a in self.assignments)
+
+
+def _search_over_shares(
+    names: Sequence[str],
+    Ts: Sequence[TimeMatrix],
+    platform: HeteroPlatform,
+    weights: Sequence[float],
+    slo_rates: Sequence[float],
+    fairness: str,
+    inner,
+) -> PartitionPlan:
+    """Rank every cluster-share assignment by the aggregate objective.
+
+    ``inner(model_index, share) -> PipelinePlan`` supplies the per-share
+    layer search; memoized per (model, share) because the same share
+    recurs across many assignments."""
+    cache: Dict[Tuple[int, Share], Tuple[HeteroPlatform, PipelinePlan, float]] = {}
+
+    def solve(mi: int, share: Share):
+        key = (mi, share)
+        if key not in cache:
+            sub = platform.subset(dict(share))
+            plan = inner(mi, sub)
+            cache[key] = (sub, plan, plan.throughput(Ts[mi]))
+        return cache[key]
+
+    best: Optional[PartitionPlan] = None
+    best_key = None
+    for assignment in enumerate_shares(platform, len(names)):
+        solved = [solve(mi, share) for mi, share in enumerate(assignment)]
+        tps = [tp for _, _, tp in solved]
+        score, shortfall = _objective_parts(tps, weights, slo_rates, fairness)
+        # lexicographic: feasibility beats any score, then least miss,
+        # then score — immune to throughputs outscaling the penalty
+        key = (shortfall == 0.0, -shortfall, score)
+        if best_key is None or key > best_key:
+            best_key = key
+            best = PartitionPlan(
+                assignments=tuple(
+                    ModelPlan(name=nm, share=sub, plan=plan, throughput=tp)
+                    for nm, (sub, plan, tp) in zip(names, solved)
+                ),
+                objective=score - SLO_PENALTY * shortfall,
+                feasible=shortfall == 0.0,
+            )
+    assert best is not None
+    return best
+
+
+def _normalize_instances(
+    instances: Mapping[str, TimeMatrix],
+    weights: Optional[Mapping[str, float]],
+    slo_rates: Optional[Mapping[str, float]],
+):
+    names = list(instances)
+    if not names:
+        raise ValueError("need >= 1 model instance")
+    # a typo'd model name must not silently drop a weight or SLO floor
+    for label, mapping in (("weights", weights), ("slo_rates", slo_rates)):
+        unknown = [k for k in (mapping or {}) if k not in instances]
+        if unknown:
+            raise ValueError(
+                f"{label} name unknown models {unknown}; instances are {names}"
+            )
+    Ts = [instances[nm] for nm in names]
+    w = [float((weights or {}).get(nm, 1.0)) for nm in names]
+    slo = [float((slo_rates or {}).get(nm, 0.0)) for nm in names]
+    return names, Ts, w, slo
+
+
+def partition_search(
+    instances: Mapping[str, TimeMatrix],
+    platform: HeteroPlatform,
+    *,
+    weights: Optional[Mapping[str, float]] = None,
+    slo_rates: Optional[Mapping[str, float]] = None,
+    mode: str = "best",
+    exact_threshold: int = 8,
+    fairness: str = "sum",
+) -> PartitionPlan:
+    """Two-level DSE for multi-model co-serving.
+
+    Level 1 enumerates cluster-share assignments (exact — the space is
+    small, Eq. 1-style counting over models instead of stages); level 2
+    reuses :func:`pipe_it_search` to balance each model's layers within
+    its share.  Models whose layer count is <= ``exact_threshold`` also
+    get the exhaustive inner search (cheap at that size), so on small
+    instances the result provably matches :func:`exhaustive_partition`.
+
+    ``instances`` maps model name -> that model's time matrix (order
+    defines model order); ``weights``/``slo_rates``/``fairness`` feed
+    :func:`partition_objective`.
+    """
+    names, Ts, w, slo = _normalize_instances(instances, weights, slo_rates)
+
+    def inner(mi: int, sub: HeteroPlatform) -> PipelinePlan:
+        n = len(Ts[mi])
+        plan = pipe_it_search(n, sub, Ts[mi], mode=mode)
+        if n <= exact_threshold:
+            exact = _exhaustive_plan(n, sub, Ts[mi])
+            if exact.throughput(Ts[mi]) > plan.throughput(Ts[mi]):
+                plan = exact
+        return plan
+
+    return _search_over_shares(names, Ts, platform, w, slo, fairness, inner)
+
+
+def exhaustive_partition(
+    instances: Mapping[str, TimeMatrix],
+    platform: HeteroPlatform,
+    *,
+    weights: Optional[Mapping[str, float]] = None,
+    slo_rates: Optional[Mapping[str, float]] = None,
+    fairness: str = "sum",
+) -> PartitionPlan:
+    """Oracle for :func:`partition_search`: the same exact share
+    enumeration, but with the exhaustive inner search everywhere.
+    Exponential in layer count; small instances only (tests/benches)."""
+    names, Ts, w, slo = _normalize_instances(instances, weights, slo_rates)
+
+    def inner(mi: int, sub: HeteroPlatform) -> PipelinePlan:
+        return _exhaustive_plan(len(Ts[mi]), sub, Ts[mi])
+
+    return _search_over_shares(names, Ts, platform, w, slo, fairness, inner)
+
 
 def exhaustive_search(
     n_layers: int,

@@ -163,3 +163,28 @@ class LayerTimePredictor:
             {stage: self.layer_time(desc, stage) for stage in vocab}
             for desc in layers
         ]
+
+    def time_matrices(
+        self, layers_by_model: "Mapping[str, Sequence[ConvDescriptor]]"
+    ) -> "Dict[str, List[Dict[StageConfig, float]]]":
+        """Time matrices for several co-resident models at once, with one
+        shared per-geometry memo: layer times depend only on descriptor
+        geometry (the autotuner cache key), and zoo CNNs share many conv
+        shapes, so the partition DSE's M-model input costs roughly the
+        number of *unique* geometries rather than the total layer count."""
+        from ..kernels.autotune import descriptor_key
+
+        vocab = self.platform.stage_vocabulary()
+        memo: Dict[str, Dict[StageConfig, float]] = {}
+        out: Dict[str, List[Dict[StageConfig, float]]] = {}
+        for name, layers in layers_by_model.items():
+            rows = []
+            for desc in layers:
+                key = descriptor_key(desc)
+                row = memo.get(key)
+                if row is None:
+                    row = {stage: self.layer_time(desc, stage) for stage in vocab}
+                    memo[key] = row
+                rows.append(dict(row))
+            out[name] = rows
+        return out

@@ -121,7 +121,9 @@ def _compositions(total: int, parts: int) -> List[Tuple[int, ...]]:
     return res
 
 
-def enumerate_pipelines(platform: HeteroPlatform, p: int) -> List[Pipeline]:
+def enumerate_pipelines(
+    platform: HeteroPlatform, p: int, allow_partial: bool = False
+) -> List[Pipeline]:
     """All pipelines with exactly p stages, faster cluster types first
     (paper §VI-B orders stages by decreasing compute capability,
     eliminating heterogeneous stages and Small-before-Big orders).
@@ -130,7 +132,13 @@ def enumerate_pipelines(platform: HeteroPlatform, p: int) -> List[Pipeline]:
     single homogeneous chip type whose stage 'capability' is group size);
     not every cluster needs to contribute stages — unused clusters idle,
     except that every core of a cluster that IS used must be assigned
-    (the paper never leaves partial clusters idle)."""
+    (the paper never leaves partial clusters idle).
+
+    ``allow_partial=True`` lifts that last rule: a used cluster's stages
+    may sum to ANY total <= its count.  This is the closure of what the
+    DSE heuristics can *emit* (merge/sweep drop stages that received no
+    layers, stranding that stage's cores), which is the plan space the
+    multi-model partition oracle must rank over (core/dse.py)."""
     cts = list(platform.core_types)
     out: List[Pipeline] = []
 
@@ -144,8 +152,10 @@ def enumerate_pipelines(platform: HeteroPlatform, p: int) -> List[Pipeline]:
         for k in range(0, min(ct.count, remaining) + 1):
             if k == 0:
                 rec(i + 1, remaining, acc)
-            else:
-                for comp in _compositions(ct.count, k):
+                continue
+            totals = range(k, ct.count + 1) if allow_partial else (ct.count,)
+            for total in totals:
+                for comp in _compositions(total, k):
                     rec(i + 1, remaining - k, acc + [(ct.name, n) for n in comp])
 
     rec(0, p, [])

@@ -66,6 +66,35 @@ class HeteroPlatform:
     def transfer_time(self, nbytes: int) -> float:
         return self.boundary_latency_s + nbytes / self.boundary_bytes_per_s
 
+    def subset(self, counts: Dict[str, int], name: str = "") -> "HeteroPlatform":
+        """A sub-platform holding ``counts[ct]`` cores of each core type.
+
+        The multi-model partition DSE (core/dse.py) carves the machine
+        into disjoint *cluster shares*, one per co-resident model; each
+        share is itself a :class:`HeteroPlatform` so the single-model DSE
+        (``pipe_it_search``) runs unchanged within it.  Core types with a
+        zero share are dropped; speeds, L2 sizes, and the boundary
+        transfer model are inherited (the CCI is chip-wide).
+        """
+        kept: List[CoreType] = []
+        for ct in self.core_types:
+            n = counts.get(ct.name, 0)
+            if n < 0 or n > ct.count:
+                raise ValueError(
+                    f"share wants {n} {ct.name!r} cores, platform has {ct.count}"
+                )
+            if n:
+                kept.append(dataclasses.replace(ct, count=n))
+        if not kept:
+            raise ValueError("a cluster share needs >= 1 core")
+        return HeteroPlatform(
+            name=name
+            or f"{self.name}[{'+'.join(f'{ct.name}{ct.count}' for ct in kept)}]",
+            core_types=tuple(kept),
+            boundary_bytes_per_s=self.boundary_bytes_per_s,
+            boundary_latency_s=self.boundary_latency_s,
+        )
+
 
 def hikey970(small_speed: float = 0.36) -> HeteroPlatform:
     """The paper's evaluation platform: 4x A73 'B' + 4x A53 's' (Fig. 1)."""

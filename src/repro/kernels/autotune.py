@@ -147,26 +147,85 @@ class ConvAutotuner:
         self.load()
 
     # ------------------------------------------------------------ persistence
-    def load(self) -> None:
-        self._entries = {}
-        if os.path.exists(self.cache_path):
-            with open(self.cache_path) as f:
+    #
+    # The cache is an *accelerator*, never a correctness dependency: a
+    # corrupted, truncated, or concurrently-rewritten file must degrade to
+    # re-timing, not raise.  Multi-model co-serving makes this load-bearing
+    # — several planners share one cache file, and two tuners (or two
+    # processes) can race on it.
+    @staticmethod
+    def _read_cache(path: str) -> dict:
+        """Best-effort parse of a cache file; {} on any damage."""
+        try:
+            with open(path) as f:
                 data = json.load(f)
-            self._entries = data.get("platforms", {}).get(self.platform, {})
+        except (OSError, ValueError):
+            return {}
+        return data if isinstance(data, dict) else {}
+
+    def load(self) -> None:
+        """Adopt the file's entries for this platform; tolerant of damage
+        (missing file, invalid JSON, wrong schema) — a broken cache means
+        an empty cache, and the tuner re-times on demand."""
+        self._entries = {}
+        platforms = self._read_cache(self.cache_path).get("platforms", {})
+        if not isinstance(platforms, dict):
+            return
+        entries = platforms.get(self.platform, {})
+        if not isinstance(entries, dict):
+            return
+        # drop individually-damaged entries (and damaged routes sub-dicts
+        # inside otherwise-healthy entries), keep everything else
+        for k, v in entries.items():
+            if not isinstance(v, dict):
+                continue
+            if "routes" in v and not isinstance(v["routes"], dict):
+                v = {kk: vv for kk, vv in v.items() if kk != "routes"}
+            self._entries[k] = v
 
     def save(self) -> None:
-        data = {"version": 1, "platforms": {}}
-        if os.path.exists(self.cache_path):
-            try:
-                with open(self.cache_path) as f:
-                    data = json.load(f)
-            except (OSError, ValueError):
-                pass
-        data.setdefault("platforms", {})[self.platform] = self._entries
-        tmp = self.cache_path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(data, f, indent=1, sort_keys=True)
-        os.replace(tmp, self.cache_path)
+        """Merge this tuner's entries into the file atomically.
+
+        The re-read + ``os.replace`` of a writer-unique temp file makes a
+        crashed or concurrent writer harmless: the final file is always
+        one writer's complete, valid JSON (a lost update costs a re-time
+        later, never a parse error).  A damaged existing file is simply
+        rebuilt."""
+        data = self._read_cache(self.cache_path)
+        if not isinstance(data.get("platforms"), dict):
+            data = {"version": 1, "platforms": {}}
+        data.setdefault("version", 1)
+        mine = data["platforms"].setdefault(self.platform, {})
+        if not isinstance(mine, dict):
+            mine = data["platforms"][self.platform] = {}
+        for key, entry in self._entries.items():
+            hit = mine.get(key)
+            if isinstance(hit, dict):  # merge: keep a peer's routes/blocks
+                merged = dict(hit)
+                peer_routes = hit.get("routes")
+                routes = {
+                    **(peer_routes if isinstance(peer_routes, dict) else {}),
+                    **entry.get("routes", {}),
+                }
+                merged.update(entry)
+                if routes:
+                    merged["routes"] = routes
+                mine[key] = merged
+            else:
+                mine[key] = entry
+        # unique temp name per writer: two concurrent save()s must never
+        # interleave inside one temp file
+        tmp = f"{self.cache_path}.{os.getpid()}.{id(self):x}.tmp"
+        try:
+            with open(tmp, "w") as f:
+                json.dump(data, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.cache_path)
+        finally:
+            if os.path.exists(tmp):
+                try:
+                    os.remove(tmp)
+                except OSError:
+                    pass
 
     # --------------------------------------------------------------- tuning
     def _sweep_shapes(self, desc: ConvDescriptor) -> Tuple[int, int, int, int]:

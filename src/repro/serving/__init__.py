@@ -14,6 +14,12 @@ paper's equations):
   running server in one call.
 * :mod:`.adaptive` — the closed loop: online calibrator → drift detector
   → re-plan → hot-swap (``serve(adaptive=True)``).
+* :mod:`.registry` / :mod:`.multimodel` — multi-model co-serving:
+  ``ModelRegistry`` + ``MultiModelServer`` run one pipeline worker set
+  per co-resident CNN on its cluster share (two-level partition DSE,
+  ``repro.core.dse.partition_search``) behind an admission-controlled
+  router; drift in any model triggers a global re-partition
+  (``serve({...}, adaptive=True)``).
 """
 from .adaptive import (
     AdaptiveConfig,
@@ -23,6 +29,7 @@ from .adaptive import (
     DriftingMatrix,
     OnlineCalibrator,
     ReplanEvent,
+    ServerSampler,
     SimulatedServing,
     StageObservation,
     attach_adaptive,
@@ -30,9 +37,23 @@ from .adaptive import (
     run_adaptive_loop,
 )
 from .batching import MicroBatch, gather, split_rows, stack_envs
-from .engine import PipelinedGraphEngine, SingleStageEngine, build_stage_fns
-from .metrics import ServerMetrics, StageMetrics, percentile
+from .engine import (
+    PipelinedGraphEngine,
+    SingleStageEngine,
+    TimeSlicedEngine,
+    build_stage_fns,
+)
+from .metrics import RouterMetrics, ServerMetrics, StageMetrics, percentile
+from .multimodel import (
+    AdmissionError,
+    MultiModelMonitor,
+    MultiModelServer,
+    PartitionController,
+    PartitionEvent,
+    attach_partition_adaptive,
+)
 from .planner import AutoPlanner, host_platform, serve
+from .registry import ModelEntry, ModelRegistry
 from .server import (
     Backpressure,
     PipelineServer,
@@ -45,15 +66,25 @@ __all__ = [
     "AdaptiveConfig",
     "AdaptiveController",
     "AdaptiveMonitor",
+    "AdmissionError",
     "AutoPlanner",
     "Backpressure",
     "DriftDetector",
     "DriftingMatrix",
+    "ModelEntry",
+    "ModelRegistry",
+    "MultiModelMonitor",
+    "MultiModelServer",
     "OnlineCalibrator",
+    "PartitionController",
+    "PartitionEvent",
     "ReplanEvent",
+    "RouterMetrics",
+    "ServerSampler",
     "SimulatedServing",
     "StageObservation",
     "attach_adaptive",
+    "attach_partition_adaptive",
     "delayed_stage_fn_builder",
     "run_adaptive_loop",
     "MicroBatch",
@@ -65,6 +96,7 @@ __all__ = [
     "SingleStageEngine",
     "StageMetrics",
     "Ticket",
+    "TimeSlicedEngine",
     "build_stage_fns",
     "gather",
     "host_platform",

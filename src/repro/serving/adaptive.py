@@ -273,6 +273,52 @@ class AdaptiveController:
 # Live-server attachment
 # ---------------------------------------------------------------------------
 
+class ServerSampler:
+    """Epoch-aware delta sampler over one server's per-stage counters.
+
+    Turns a :class:`PipelineServer`'s monotone stage counters into
+    per-window :class:`StageObservation` deltas (per-image busy seconds
+    over the items newly completed in the window).  Counter baselines reset on
+    every epoch bump because a hot-swap replaces the stage structure and
+    its metrics objects.  Shared by the single-model
+    :class:`AdaptiveMonitor` and the multi-model partition monitor
+    (serving/multimodel.py), which runs one sampler per co-resident
+    model.
+    """
+
+    def __init__(self, server: PipelineServer, min_items: int = 1):
+        self.server = server
+        self.min_items = min_items
+        self._seen_epoch = -1
+        self._base: List[Tuple[float, int]] = []
+
+    def sample(self) -> List[StageObservation]:
+        if self.server.epoch != self._seen_epoch:
+            self._seen_epoch = self.server.epoch
+            self._base = [(0.0, 0) for _ in self.server.metrics.stages]
+        plan = self.server.plan
+        stages = self.server.metrics.stages
+        if len(stages) != plan.pipeline.p or len(stages) != len(self._base):
+            return []  # raced with a concurrent swap; next window is clean
+        out: List[StageObservation] = []
+        for i, m in enumerate(stages):
+            busy, items = m.totals()  # consistent pair vs. the worker
+            base_busy, base_items = self._base[i]
+            d_items = items - base_items
+            if d_items < self.min_items:
+                continue
+            self._base[i] = (busy, items)
+            out.append(
+                StageObservation(
+                    stage=plan.pipeline.stages[i],
+                    layers=tuple(plan.allocation[i]),
+                    service_s=(busy - base_busy) / d_items,
+                    items=d_items,
+                )
+            )
+        return out
+
+
 class AdaptiveMonitor:
     """Background control loop over a live :class:`PipelineServer`.
 
@@ -299,8 +345,9 @@ class AdaptiveMonitor:
         )
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
-        self._seen_epoch = -1
-        self._base: List[Tuple[float, int]] = []
+        self._sampler = ServerSampler(
+            server, min_items=controller.config.min_items
+        )
         # Last exception seen by the background loop (None while healthy).
         # Transient faults are retried; after max_failures consecutive
         # ones the loop gives up and PipelineServer.stop() raises this —
@@ -312,31 +359,7 @@ class AdaptiveMonitor:
 
     def sample(self) -> List[StageObservation]:
         """One observation window (public so tests can drive it directly)."""
-        if self.server.epoch != self._seen_epoch:
-            self._seen_epoch = self.server.epoch
-            self._base = [(0.0, 0) for _ in self.server.metrics.stages]
-        plan = self.server.plan
-        stages = self.server.metrics.stages
-        if len(stages) != plan.pipeline.p or len(stages) != len(self._base):
-            return []  # raced with a concurrent swap; next window is clean
-        out: List[StageObservation] = []
-        min_items = self.controller.config.min_items
-        for i, m in enumerate(stages):
-            busy, items = m.totals()  # consistent pair vs. the worker
-            base_busy, base_items = self._base[i]
-            d_items = items - base_items
-            if d_items < min_items:
-                continue
-            self._base[i] = (busy, items)
-            out.append(
-                StageObservation(
-                    stage=plan.pipeline.stages[i],
-                    layers=tuple(plan.allocation[i]),
-                    service_s=(busy - base_busy) / d_items,
-                    items=d_items,
-                )
-            )
-        return out
+        return self._sampler.sample()
 
     def step(self) -> Optional[PipelinePlan]:
         """Sample + control + (maybe) hot-swap; returns the swapped plan."""

@@ -97,17 +97,25 @@ class SingleStageEngine:
 
 
 class PipelinedGraphEngine:
-    """Layer-level pipelined execution of a CNN graph per a PipelinePlan."""
+    """Layer-level pipelined execution of a CNN graph per a PipelinePlan.
+
+    ``stage_fn_builder`` mirrors the PipelineServer hook: a
+    ``(graph, plan) -> [stage_fn]`` factory replacing the default jitted
+    executables (fake-stage benchmarks inject scripted delays here).
+    """
 
     def __init__(
         self, graph: Graph, params, plan: PipelinePlan,
-        queue_depth: int = 4, backend=None,
+        queue_depth: int = 4, backend=None, stage_fn_builder=None,
     ):
         self.graph = graph
         self.params = params
         self.plan = plan
         self.queue_depth = queue_depth
-        self._stage_fns = build_stage_fns(graph, plan, backend=backend)
+        if stage_fn_builder is None:
+            self._stage_fns = build_stage_fns(graph, plan, backend=backend)
+        else:
+            self._stage_fns = stage_fn_builder(graph, plan)
 
     def warmup(self, x):
         env = {"input": x}
@@ -178,4 +186,72 @@ class PipelinedGraphEngine:
             "seconds": dt,
             "throughput": done / dt,
             "stages": self.plan.pipeline.notation(),
+        }
+
+
+class TimeSlicedEngine:
+    """Multi-model baseline: ONE full-width machine, time-sliced per model.
+
+    A :class:`PipelineServer`/:class:`PipelinedGraphEngine` executes one
+    graph; a single full-width deployment serving several CNNs must
+    therefore *alternate* — run a slice of model A's stream, drain the
+    pipeline, switch graphs, run a slice of model B's, and so on.  Every
+    switch pays the pipeline fill/drain term of Eq. 11 again, and the
+    slice quantum cannot grow without bound because the co-resident
+    model's requests age for a whole foreign slice (the quantum-vs-latency
+    trade PICO 2206.08662 §III describes).  This engine measures exactly
+    that: round-robin slices of ``quantum`` images through per-model
+    full-width engines, strictly serialized.
+
+    The co-serving alternative (``MultiModelServer`` on a
+    :func:`~repro.core.dse.partition_search` cluster partition) keeps one
+    always-full pipeline per model instead; ``benchmarks/
+    multimodel_serving.py`` compares the two.
+    """
+
+    def __init__(self, engines: Dict[str, PipelinedGraphEngine], quantum: int = 4):
+        if quantum < 1:
+            raise ValueError("quantum must be >= 1")
+        if not engines:
+            raise ValueError("need >= 1 engine")
+        self.engines = dict(engines)
+        self.quantum = quantum
+
+    def warmup(self, images: Dict[str, Any]) -> None:
+        for name, eng in self.engines.items():
+            eng.warmup(images[name])
+
+    def run(self, streams: Dict[str, Sequence[Any]]) -> Dict[str, Any]:
+        """Serve every per-model stream to completion, one slice at a time.
+
+        Returns per-model ordered outputs plus the aggregate wall-clock
+        throughput (total images / total serialized seconds)."""
+        cursors = {name: 0 for name in streams}
+        outputs: Dict[str, List[Any]] = {name: [] for name in streams}
+        slices = 0
+        t0 = time.perf_counter()
+        while True:
+            progressed = False
+            for name, images in streams.items():
+                lo = cursors[name]
+                if lo >= len(images):
+                    continue
+                hi = min(lo + self.quantum, len(images))
+                # each slice fills AND drains the pipeline: run() spawns
+                # workers, streams the slice, and joins them
+                res = self.engines[name].run(images[lo:hi])
+                outputs[name].extend(res["outputs"])
+                cursors[name] = hi
+                slices += 1
+                progressed = True
+            if not progressed:
+                break
+        dt = time.perf_counter() - t0
+        total = sum(len(v) for v in streams.values())
+        return {
+            "outputs": outputs,
+            "seconds": dt,
+            "throughput": total / dt,
+            "slices": slices,
+            "quantum": self.quantum,
         }

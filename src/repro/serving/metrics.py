@@ -179,3 +179,46 @@ class ServerMetrics:
             "e2e_p99_s": percentile(e2e, 99),
             "stages": [s.snapshot() for s in self.stages],
         }
+
+
+class RouterMetrics:
+    """Per-model admission accounting for the multi-model front-end.
+
+    The router decides — per model — whether a request is *admitted* into
+    that model's pipeline or *rejected* (admission control: the model's
+    in-flight bound is hit, or its pipeline pushed back).  Completion and
+    latency live in each model's own :class:`ServerMetrics`; this class
+    owns only what the router itself decides, so a rejected request never
+    pollutes a pipeline's service-time statistics.
+    """
+
+    def __init__(self, names: Sequence[str]):
+        self._lock = threading.Lock()
+        self._admitted: Dict[str, int] = {n: 0 for n in names}
+        self._rejected: Dict[str, int] = {n: 0 for n in names}
+
+    def note_admit(self, name: str) -> None:
+        with self._lock:
+            self._admitted[name] += 1
+
+    def note_reject(self, name: str) -> None:
+        with self._lock:
+            self._rejected[name] += 1
+
+    def admitted(self, name: str) -> int:
+        with self._lock:
+            return self._admitted[name]
+
+    def rejected(self, name: str) -> int:
+        with self._lock:
+            return self._rejected[name]
+
+    def snapshot(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                name: {
+                    "admitted": self._admitted[name],
+                    "rejected": self._rejected[name],
+                }
+                for name in self._admitted
+            }

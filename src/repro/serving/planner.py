@@ -24,18 +24,20 @@ simulated-board matrices this way).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Union
+from typing import Dict, Mapping, Optional, Sequence, Union
 
 import jax
 
 from ..cnn.graph import Graph
 from ..cnn.models import MODELS
 from ..core.calibration import calibrate, synthetic_model
-from ..core.dse import pipe_it_search
+from ..core.dse import PartitionPlan, partition_search, pipe_it_search
 from ..core.perfmodel import LayerTimePredictor
 from ..core.pipeline import PipelinePlan, TimeMatrix
 from ..core.platform import CoreType, HeteroPlatform, hikey970
 from .adaptive import AdaptiveConfig, attach_adaptive
+from .multimodel import MultiModelServer, attach_partition_adaptive
+from .registry import ModelRegistry
 from .server import PipelineServer
 
 
@@ -112,6 +114,78 @@ class AutoPlanner:
         T = self.time_matrix(graph) if T is None else T
         return self.search(len(graph.descriptors()), T)
 
+    # ------------------------------------------------------- multi-model path
+    def time_matrices(
+        self, graphs: Mapping[str, Graph]
+    ) -> Dict[str, TimeMatrix]:
+        """Per-model predicted time matrices with one shared per-geometry
+        memo (co-resident zoo CNNs share many conv shapes)."""
+        return self.predictor().time_matrices(
+            {name: g.descriptors() for name, g in graphs.items()}
+        )
+
+    def partition(
+        self,
+        graphs: Mapping[str, Graph],
+        Ts: Optional[Mapping[str, TimeMatrix]] = None,
+        *,
+        weights: Optional[Mapping[str, float]] = None,
+        slo_rates: Optional[Mapping[str, float]] = None,
+        exact_threshold: int = 8,
+        fairness: str = "sum",
+    ) -> PartitionPlan:
+        """Two-level DSE: clusters across models, layers within each share
+        (:func:`repro.core.dse.partition_search`)."""
+        if Ts is None:
+            Ts = self.time_matrices(graphs)
+        return partition_search(
+            {name: Ts[name] for name in graphs},  # graph order defines model order
+            self.platform,
+            weights=weights,
+            slo_rates=slo_rates,
+            mode=self.mode,
+            exact_threshold=exact_threshold,
+            fairness=fairness,
+        )
+
+    def build_multi(
+        self,
+        registry: ModelRegistry,
+        *,
+        time_matrices: Optional[Mapping[str, TimeMatrix]] = None,
+        batch_size: int = 1,
+        flush_timeout_s: float = 0.01,
+        queue_depth: int = 2,
+        max_inflight=None,
+        warmup: bool = True,
+        stage_fn_builders=None,
+        fairness: str = "sum",
+    ) -> MultiModelServer:
+        """Partition the platform across the registry's models and
+        construct a (warmed, started) :class:`MultiModelServer`."""
+        partition = self.partition(
+            registry.graphs(),
+            time_matrices,
+            weights=registry.weights(),
+            slo_rates=registry.slo_rates(),
+            fairness=fairness,
+        )
+        mserver = MultiModelServer(
+            registry,
+            partition,
+            batch_size=batch_size,
+            flush_timeout_s=flush_timeout_s,
+            queue_depth=queue_depth,
+            max_inflight=max_inflight,
+            stage_fn_builders=stage_fn_builders,
+            backend=self.backend,
+            tuner=self.tuner,
+            fairness=fairness,
+        )
+        if warmup:
+            mserver.warmup()
+        return mserver.start()
+
     def build(
         self,
         graph: Graph,
@@ -145,7 +219,7 @@ class AutoPlanner:
 
 
 def serve(
-    model: Union[str, Graph],
+    model: Union[str, Graph, Mapping, ModelRegistry],
     *,
     mode: str = "best",
     source: str = "synthetic",
@@ -163,6 +237,8 @@ def serve(
     backend=None,
     autotune: bool = False,
     tuner=None,
+    max_inflight=None,
+    fairness: Optional[str] = None,
 ) -> PipelineServer:
     """One call from model name (or Graph) to a running PipelineServer.
 
@@ -182,12 +258,54 @@ def serve(
     the Eq. 5 regression alone — so the DSE balances stages by the
     kernels that actually run.
 
+    **Multi-model co-serving**: pass a dict (or
+    :class:`~repro.serving.registry.ModelRegistry`) instead of one model
+    and ``serve`` returns a :class:`~repro.serving.multimodel.
+    MultiModelServer` — the two-level partition DSE splits the clusters
+    across the models, one pipeline worker set per model runs on its
+    share behind the admission-controlled router, every model's route
+    measurements share ONE autotuner cache, and ``adaptive=True``
+    attaches the global re-partition loop.  ``max_inflight`` (an int or
+    ``{model: bound}``) arms the router's per-model admission bound and
+    ``fairness`` ("sum" | "max-min") selects the partition objective —
+    both are multi-model-only and rejected for a single model.
+
     >>> server = serve("squeezenet", mode="best", batch_size=8)
     >>> ticket = server.submit(image)
     >>> logits = ticket.result()
     >>> server.stop()
+
+    >>> mm = serve({"alex": "alexnet", "squeeze": "squeezenet"})
+    >>> logits = mm.submit("alex", image).result()
+    >>> mm.stop()
     """
     from ..kernels.backend import measure_graph_routes, resolve_backend
+
+    if isinstance(model, (Mapping, ModelRegistry)):
+        return _serve_multi(
+            ModelRegistry.coerce(model),
+            mode=mode,
+            source=source,
+            platform=platform,
+            time_matrix=time_matrix,
+            batch_size=batch_size,
+            flush_timeout_s=flush_timeout_s,
+            queue_depth=queue_depth,
+            warmup=warmup,
+            adaptive=adaptive,
+            adaptive_config=adaptive_config,
+            stage_fn_builder=stage_fn_builder,
+            backend=backend,
+            autotune=autotune,
+            tuner=tuner,
+            max_inflight=max_inflight,
+            fairness=fairness if fairness is not None else "sum",
+        )
+    if max_inflight is not None or fairness is not None:
+        raise ValueError(
+            "max_inflight/fairness are multi-model options; pass a dict of "
+            "models (or a ModelRegistry) to serve()"
+        )
 
     graph = MODELS[model]() if isinstance(model, str) else model
     if tuner is None and autotune:
@@ -231,3 +349,91 @@ def serve(
             config=adaptive_config,
         )
     return server
+
+
+def _serve_multi(
+    registry: ModelRegistry,
+    *,
+    mode: str,
+    source: str,
+    platform: Optional[HeteroPlatform],
+    time_matrix,
+    batch_size: int,
+    flush_timeout_s: float,
+    queue_depth: int,
+    warmup: bool,
+    adaptive: bool,
+    adaptive_config: Optional[AdaptiveConfig],
+    stage_fn_builder,
+    backend,
+    autotune: bool,
+    tuner,
+    max_inflight,
+    fairness: str,
+) -> MultiModelServer:
+    """The multi-model arm of :func:`serve`.
+
+    Mirrors the single-model chain per co-resident model — calibrate,
+    predict, search, run — but with the two-level partition DSE in the
+    middle and exactly ONE :class:`ConvAutotuner` shared by every model's
+    route measurements: descriptor keys are geometry-keyed, so a conv
+    shape two models share is measured once and both time matrices see
+    the same measured truth.
+    """
+    from ..kernels.backend import measure_graph_routes, resolve_backend
+
+    if len(registry) == 0:
+        raise ValueError("serve() got an empty model registry")
+    if tuner is None and autotune:
+        from ..kernels.autotune import ConvAutotuner
+
+        tuner = ConvAutotuner()
+    if backend is None and tuner is not None:
+        backend = "xla"  # measurements must reflect the route that serves
+    kb = resolve_backend(backend, tuner=tuner)
+    measured = None
+    if kb is not None and tuner is not None and time_matrix is None:
+        for entry in registry:  # one shared cache: common shapes time once
+            measure_graph_routes(entry.graph, kb, tuner)
+        measured = tuner.route_seconds()
+    planner = AutoPlanner(
+        platform=platform if platform is not None else hikey970(),
+        mode=mode,
+        source=source,
+        backend=kb,
+        measured=measured,
+        tuner=tuner,
+    )
+    if time_matrix is None:
+        Ts = planner.time_matrices(registry.graphs())
+    elif isinstance(time_matrix, Mapping):
+        Ts = {e.name: time_matrix[e.name] for e in registry}
+    else:
+        raise ValueError(
+            "multi-model serve() needs time_matrix as {model: TimeMatrix}"
+        )
+    builders = None
+    if stage_fn_builder is not None:
+        # a single builder callable applies to every model; per-model
+        # overrides go through AutoPlanner.build_multi directly
+        builders = {e.name: stage_fn_builder for e in registry}
+    mserver = planner.build_multi(
+        registry,
+        time_matrices=Ts,
+        batch_size=batch_size,
+        flush_timeout_s=flush_timeout_s,
+        queue_depth=queue_depth,
+        warmup=warmup,
+        stage_fn_builders=builders,
+        max_inflight=max_inflight,
+        fairness=fairness,
+    )
+    if adaptive:
+        attach_partition_adaptive(
+            mserver,
+            priors=Ts,
+            platform=planner.platform,
+            mode=mode,
+            config=adaptive_config,
+        )
+    return mserver

@@ -61,21 +61,50 @@ class ServerClosed(ServingError):
 class Ticket:
     """A pending result for one submitted image (a minimal future)."""
 
-    __slots__ = ("submitted_at", "_event", "_value", "_error")
+    __slots__ = (
+        "submitted_at", "_event", "_value", "_error", "_callbacks", "_cb_lock"
+    )
 
     def __init__(self, submitted_at: float):
         self.submitted_at = submitted_at
         self._event = threading.Event()
         self._value: Optional[jnp.ndarray] = None
         self._error: Optional[BaseException] = None
+        self._callbacks: List = []
+        self._cb_lock = threading.Lock()
 
     def _resolve(self, value: jnp.ndarray) -> None:
         self._value = value
-        self._event.set()
+        self._finish()
 
     def _fail(self, error: BaseException) -> None:
         self._error = error
+        self._finish()
+
+    def _finish(self) -> None:
         self._event.set()
+        with self._cb_lock:
+            callbacks, self._callbacks = self._callbacks, []
+        for cb in callbacks:
+            try:
+                cb(self)
+            except Exception:  # noqa: BLE001 — a callback must not kill egress
+                pass
+
+    def add_done_callback(self, fn) -> None:
+        """Run ``fn(ticket)`` when the ticket resolves or fails; runs
+        immediately if it already has.  Fires exactly once per callback
+        (the multi-model router counts its admitted in-flight load with
+        this).  ``_fail`` can race ``_resolve`` only after a worker
+        failure, where the loser finds the list already drained."""
+        with self._cb_lock:
+            if not self._event.is_set():
+                self._callbacks.append(fn)
+                return
+        try:
+            fn(self)
+        except Exception:  # noqa: BLE001 — symmetric with _finish
+            pass
 
     def done(self) -> bool:
         return self._event.is_set()
@@ -126,9 +155,11 @@ class PipelineServer:
         queue_depth: int = 2,
         stage_fn_builder=None,
         backend=None,
+        name: str = "pipe",
     ):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
+        self.name = name  # label for worker threads (multi-model servers)
         self.graph = graph
         self.params = params
         self.plan = plan
@@ -182,24 +213,32 @@ class PipelineServer:
         """Worker generation: bumped by every completed swap_plan()."""
         return self._epoch
 
+    @property
+    def inflight(self) -> int:
+        """Requests admitted but not yet resolved or failed — the signal
+        the multi-model router's per-model admission control bounds."""
+        with self._lock:
+            return len(self._inflight)
+
     def _spawn_workers(self) -> None:
         n = len(self._stage_fns)
         e = self._epoch
+        tag = self.name
         self._threads = [
             threading.Thread(
-                target=self._stage0_worker, name=f"pipe-e{e}-stage0", daemon=True
+                target=self._stage0_worker, name=f"{tag}-e{e}-stage0", daemon=True
             )
         ]
         for i in range(1, n):
             self._threads.append(
                 threading.Thread(
                     target=self._stage_worker, args=(i,),
-                    name=f"pipe-e{e}-stage{i}", daemon=True,
+                    name=f"{tag}-e{e}-stage{i}", daemon=True,
                 )
             )
         self._threads.append(
             threading.Thread(
-                target=self._egress_worker, name=f"pipe-e{e}-egress", daemon=True
+                target=self._egress_worker, name=f"{tag}-e{e}-egress", daemon=True
             )
         )
         for t in self._threads:

@@ -146,6 +146,146 @@ def test_predictor_consumes_measured_times():
         )
 
 
+# ----------------------------------------------------- cache robustness
+# A damaged or contended cache file must degrade to re-timing, never
+# raise: co-serving shares one cache across models, tuners, and processes.
+
+@pytest.mark.parametrize(
+    "payload",
+    [
+        b"",  # empty file
+        b"not json at all {{{",  # garbage
+        b'{"version": 1, "platforms": {"cpu": {"k": {"bm": 8',  # truncated
+        b'[1, 2, 3]',  # valid JSON, wrong top-level type
+        b'{"version": 1, "platforms": []}',  # platforms not a dict
+        b'{"version": 1, "platforms": {"cpu": 7}}',  # platform not a dict
+        b'{"version": 1, "platforms": {"cpu": {"k": 3}}}',  # entry damaged
+    ],
+    ids=["empty", "garbage", "truncated", "wrong-type", "platforms-list",
+         "platform-scalar", "entry-scalar"],
+)
+def test_corrupt_cache_falls_back_to_retiming(tmp_path, payload):
+    cache = tmp_path / "tune.json"
+    cache.write_bytes(payload)
+    t = ConvAutotuner(cache_path=str(cache), sweep=False, repeats=1)
+    assert t.entry(TINY) is None  # damaged content discarded, not raised
+    assert t.measure_route(TINY, lambda: None, route="xla") > 0
+    assert t.timings_run == 1  # fell back to a real timing
+    t.save()
+    # the rewritten file is valid again and round-trips
+    t2 = ConvAutotuner(cache_path=str(cache), sweep=False, repeats=1)
+    assert t2.measured_route(TINY, "xla") is not None
+    assert t2.timings_run == 0
+
+
+def test_damaged_routes_field_inside_healthy_entry(tmp_path):
+    """Entry-level damage one level down: a non-dict "routes" value must
+    be dropped on load (re-time, never raise) and save() must rebuild a
+    valid file even when merging over the damaged original."""
+    cache = tmp_path / "tune.json"
+    cache.write_text(json.dumps({
+        "version": 1,
+        "platforms": {jax.default_backend(): {descriptor_key(TINY): {
+            "swept": False, "candidates": 0, "routes": 7,
+        }}},
+    }))
+    t = ConvAutotuner(cache_path=str(cache), sweep=False, repeats=1)
+    assert t.measured_route(TINY, "xla") is None  # damage discarded
+    assert t.measure_route(TINY, lambda: None, route="xla") > 0
+    assert t.timings_run == 1  # re-timed
+    t2 = ConvAutotuner(cache_path=str(cache), sweep=False, repeats=1)
+    assert t2.measured_route(TINY, "xla") is not None
+    assert sorted(t2.route_seconds()) == [descriptor_key(TINY)]
+
+
+def test_concurrent_tuner_writers_never_corrupt(tmp_path):
+    """Two tuners (one cache file) interleaving saves: no exception, the
+    file stays valid JSON, and the union of routes survives the race."""
+    import threading
+
+    cache = str(tmp_path / "tune.json")
+    descs = [conv_descriptor(f"l{i}", 8 + 2 * i, 4, 3, 8) for i in range(6)]
+    tuners = [ConvAutotuner(cache_path=cache, sweep=False, repeats=1) for _ in range(2)]
+    errors = []
+
+    def writer(t, mine):
+        try:
+            for d in mine:
+                t.measure_route(d, lambda: None, route="xla")  # save() per call
+        except BaseException as e:  # noqa: BLE001 — the test asserts none
+            errors.append(e)
+
+    threads = [
+        threading.Thread(target=writer, args=(t, descs[i::2]))
+        for i, t in enumerate(tuners)
+    ]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=60)
+    assert not errors
+    with open(cache) as f:
+        data = json.load(f)  # whole file is one writer's complete JSON
+    assert isinstance(data["platforms"], dict)
+    # a lost update costs a re-time, never a crash: a fresh tuner loads
+    # whatever survived and re-times the rest without raising
+    t3 = ConvAutotuner(cache_path=cache, sweep=False, repeats=1)
+    for d in descs:
+        assert t3.measure_route(d, lambda: None, route="xla") > 0
+    # save() merges, so after this pass every geometry is persisted
+    t4 = ConvAutotuner(cache_path=cache, sweep=False, repeats=1)
+    assert all(t4.measured_route(d, "xla") is not None for d in descs)
+
+
+def test_save_merges_concurrent_route_entries(tmp_path):
+    """Writer B saving after writer A must not clobber A's routes for a
+    key B also holds (the multi-model shared-cache contract)."""
+    cache = str(tmp_path / "tune.json")
+    a = ConvAutotuner(cache_path=cache, sweep=False, repeats=1)
+    b = ConvAutotuner(cache_path=cache, sweep=False, repeats=1)  # loaded empty
+    a.measure_route(TINY, lambda: None, route="xla")
+    b.measure_route(TINY, lambda: None, route="pallas_fused")  # saves after a
+    merged = ConvAutotuner(cache_path=cache, sweep=False, repeats=1)
+    assert merged.measured_route(TINY, "xla") is not None
+    assert merged.measured_route(TINY, "pallas_fused") is not None
+
+
+def test_shared_tuner_across_models_times_geometry_once(tmp_path):
+    """Two co-resident graphs sharing conv geometries through ONE tuner:
+    the shared shapes are measured once (descriptor keys are geometry,
+    not model), which is why serve({...}) threads a single autotuner."""
+    from repro.cnn.graph import Graph
+
+    def g1():
+        g = Graph("g1", (16, 16, 3))
+        a = g.conv("c1", "input", 8, 3)  # shared geometry
+        a = g.conv("c2", a, 8, 3)
+        a = g.gap("gap", a)
+        a = g.fc("fc", a, 10)
+        return g
+
+    def g2():
+        g = Graph("g2", (16, 16, 3))
+        a = g.conv("x1", "input", 8, 3)  # same geometry as g1.c1
+        a = g.conv("x2", a, 16, 1)  # unique to g2
+        a = g.gap("gap", a)
+        a = g.fc("fc", a, 10)
+        return g
+
+    tuner = ConvAutotuner(cache_path=str(tmp_path / "tune.json"), sweep=False,
+                          repeats=1)
+    kb = resolve_backend("xla", tuner=tuner)
+    measure_graph_routes(g1(), kb, tuner)
+    after_first = tuner.timings_run
+    measure_graph_routes(g2(), kb, tuner)
+    # g2 re-times only its unique geometries, not the shared conv
+    unique_g2 = {
+        descriptor_key(d)
+        for d in g2().descriptors()
+    } - {descriptor_key(d) for d in g1().descriptors()}
+    assert tuner.timings_run == after_first + len(unique_g2)
+
+
 def test_planner_time_matrix_uses_tuner(tmp_path):
     """AutoPlanner(tuner=...) builds T from measured routes (no API break:
     planner without tuner is byte-identical behaviour)."""

@@ -9,9 +9,10 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 ENV = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src") + ":" + REPO)
 
 
-def _run(args, timeout=420):
+def _run(args, timeout=420, env=None):
     res = subprocess.run(
-        args, env=ENV, cwd=REPO, capture_output=True, text=True, timeout=timeout
+        args, env=env or ENV, cwd=REPO, capture_output=True, text=True,
+        timeout=timeout,
     )
     assert res.returncode == 0, (res.stdout[-1500:], res.stderr[-1500:])
     return res.stdout
@@ -43,6 +44,29 @@ def test_quickstart_example():
 def test_train_example_learns():
     out = _run([sys.executable, "examples/train_smollm.py", "60"])
     assert "LEARNED" in out
+
+
+def test_multimodel_benchmark_smoke():
+    """Tiny-shape co-serving benchmark: the >=1.2x co-vs-timeslice
+    acceptance assert runs INSIDE the benchmark; interpret mode is forced
+    so any Pallas-routed kernel stays CI-safe."""
+    out = _run(
+        [sys.executable, "-m", "benchmarks.multimodel_serving", "--tiny",
+         "--repeats", "1"],
+        env=dict(ENV, REPRO_PALLAS_INTERPRET="1"),
+    )
+    assert "ratio" in out and "outputs_bitwise_equal=yes" in out
+    assert "coserved" in out and "timesliced" in out
+
+
+def test_serve_multimodel_example():
+    out = _run(
+        [sys.executable, "examples/serve_multimodel.py", "--tiny"],
+        env=dict(ENV, REPRO_PALLAS_INTERPRET="1"),
+    )
+    assert "partition" in out
+    assert "outputs equal each model's single-engine baseline" in out
+    assert "no request dropped" in out
 
 
 def test_pipeit_tpu_example():

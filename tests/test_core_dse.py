@@ -7,17 +7,21 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import (
     ConvDescriptor,
+    CoreType,
+    HeteroPlatform,
     LayerTimePredictor,
     Pipeline,
     PipelinePlan,
     conv_descriptor,
     design_space_size,
     enumerate_pipelines,
+    exhaustive_partition,
     exhaustive_search,
     exhaustive_two_way_split,
     find_split,
     hikey970,
     num_pipelines,
+    partition_search,
     pipe_it_search,
     stage_time,
     work_flow,
@@ -247,3 +251,136 @@ def test_plan_is_valid_partition(n):
     plan.pipeline.validate_against(PLAT)
     flat = [l for st_ in plan.allocation for l in st_]
     assert flat == list(range(n))
+
+
+# ---------------------------- Two-level partition DSE properties (ISSUE 4)
+# partition_search must match the exhaustive_partition oracle on small
+# instances (the inner search is exact below exact_threshold), for ANY
+# positive time matrix, weights, and SLO floors.  A small 2+2 platform
+# keeps the oracle fast under hypothesis; one hikey970-sized test pins
+# the acceptance shape (<= 6 layers/model, <= 2 models, full 4+4).
+
+_PART_PLAT = HeteroPlatform(
+    "b2s2", (CoreType("B", 2, 1.0), CoreType("s", 2, 0.36))
+)
+_PART_VOCAB = _PART_PLAT.stage_vocabulary()
+
+
+def _check_partition_matches_oracle(instances, platform, weights, slos,
+                                    fairness="sum"):
+    got = partition_search(
+        instances, platform, weights=weights, slo_rates=slos,
+        exact_threshold=8, fairness=fairness,
+    )
+    oracle = exhaustive_partition(
+        instances, platform, weights=weights, slo_rates=slos, fairness=fairness
+    )
+    assert got.objective == pytest.approx(oracle.objective, rel=1e-9)
+    assert got.feasible == oracle.feasible
+    # structural sanity: shares are disjoint+complete, plans fit them
+    totals = {ct.name: 0 for ct in platform.core_types}
+    for mp in got.assignments:
+        mp.plan.pipeline.validate_against(mp.share)
+        flat = [l for stage in mp.plan.allocation for l in stage]
+        assert flat == list(range(len(instances[mp.name])))
+        for ct in mp.share.core_types:
+            totals[ct.name] += ct.count
+    assert totals == {ct.name: ct.count for ct in platform.core_types}
+    # each model's inner split is itself optimal: a two-stage inner plan
+    # must achieve the exhaustive optimal contiguous two-way split for
+    # its own pipeline (Algorithm 1's oracle)
+    for mp in got.assignments:
+        if mp.plan.pipeline.p == 2:
+            T = instances[mp.name]
+            a, b = mp.plan.pipeline.stages
+            achieved = mp.plan.bottleneck(T)
+            _, optimal = exhaustive_two_way_split(
+                range(len(T)), T, a, b
+            )
+            assert achieved <= optimal + 1e-12 * max(optimal, 1.0)
+
+
+def _random_partition_instance(rng, vocab):
+    m = int(rng.integers(1, 3))
+    instances = {}
+    for mi in range(m):
+        n = int(rng.integers(1, 7))
+        instances[f"m{mi}"] = [
+            {s: float(rng.uniform(1e-5, 1.0)) for s in vocab} for _ in range(n)
+        ]
+    weights = {nm: float(rng.uniform(0.25, 4.0)) for nm in instances}
+    slos = {nm: float(rng.uniform(0.0, 8.0)) for nm in instances}
+    fairness = "max-min" if rng.integers(0, 2) else "sum"
+    return instances, weights, slos, fairness
+
+
+@pytest.mark.parametrize("seed", range(15))
+def test_partition_search_matches_oracle_seeded(seed):
+    """Deterministic fallback of the hypothesis property below — runs
+    even where hypothesis is only the conftest stub."""
+    rng = np.random.default_rng(seed)
+    instances, weights, slos, fairness = _random_partition_instance(
+        rng, _PART_VOCAB
+    )
+    _check_partition_matches_oracle(
+        instances, _PART_PLAT, weights, slos, fairness
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.lists(  # model A: 1-6 layers of per-config times
+        st.lists(
+            st.floats(min_value=1e-6, max_value=1e3, allow_nan=False,
+                      allow_infinity=False),
+            min_size=len(_PART_VOCAB), max_size=len(_PART_VOCAB),
+        ),
+        min_size=1, max_size=6,
+    ),
+    st.lists(  # model B: 0-6 layers (0 => single-model instance)
+        st.lists(
+            st.floats(min_value=1e-6, max_value=1e3, allow_nan=False,
+                      allow_infinity=False),
+            min_size=len(_PART_VOCAB), max_size=len(_PART_VOCAB),
+        ),
+        min_size=0, max_size=6,
+    ),
+    st.floats(min_value=0.25, max_value=4.0),  # weight of model A
+    st.floats(min_value=0.0, max_value=8.0),  # SLO floor of model B
+    st.booleans(),  # objective: utilitarian sum vs egalitarian max-min
+)
+def test_partition_search_matches_oracle(rows_a, rows_b, w_a, slo_b, maxmin):
+    """Property (ISSUE 4): on random small instances the two-level search
+    equals the exhaustive partition oracle — aggregate objective,
+    feasibility, and per-model inner-split optimality — under both
+    fairness objectives."""
+    instances = {"a": [dict(zip(_PART_VOCAB, r)) for r in rows_a]}
+    if rows_b:
+        instances["b"] = [dict(zip(_PART_VOCAB, r)) for r in rows_b]
+    weights = {"a": w_a}
+    slos = {"b": slo_b} if rows_b else {}
+    _check_partition_matches_oracle(
+        instances, _PART_PLAT, weights, slos,
+        "max-min" if maxmin else "sum",
+    )
+
+
+def test_partition_search_matches_oracle_full_hikey970():
+    """The acceptance instance shape: <= 6 layers per model, 2 models,
+    the paper's full 4+4 platform."""
+    vocab = PLAT.stage_vocabulary()
+    for seed in (0, 1):
+        rng = np.random.default_rng(seed)
+        instances = {
+            "a": [
+                {s: float(rng.uniform(1e-5, 1.0)) for s in vocab}
+                for _ in range(6)
+            ],
+            "b": [
+                {s: float(rng.uniform(1e-5, 1.0)) for s in vocab}
+                for _ in range(4)
+            ],
+        }
+        _check_partition_matches_oracle(
+            instances, PLAT, {"a": 1.5, "b": 1.0}, {"b": 1.0}
+        )

@@ -1,0 +1,537 @@
+"""Multi-model co-serving: registry, two-level partition DSE integration,
+router/admission, partition hot-swap, and the global re-partition loop.
+
+Tiny CNNs (16x16 inputs, <= 6 major layers) keep every test in seconds;
+the concurrency stress test lives in tests/test_serving.py (slow-marked).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cnn.graph import Graph
+from repro.core import (
+    enumerate_shares,
+    hikey970,
+    partition_objective,
+    partition_search,
+)
+from repro.serving import (
+    AdaptiveConfig,
+    AdmissionError,
+    AutoPlanner,
+    ModelEntry,
+    ModelRegistry,
+    MultiModelServer,
+    PartitionController,
+    SingleStageEngine,
+    serve,
+)
+
+PLAT = hikey970()
+
+
+def tiny(name: str, ch: int = 8) -> Graph:
+    g = Graph(name, (16, 16, 3))
+    a = g.conv("c1", "input", ch, 3)
+    a = g.conv("c2", a, ch, 3, stride=2)
+    a = g.conv("c3", a, 2 * ch, 1)
+    a = g.pool_max("p1", a, 2, 2)
+    a = g.conv("c4", a, 2 * ch, 3)
+    a = g.gap("gap", a)
+    a = g.fc("fc", a, 10)
+    g.softmax("sm", a)
+    return g
+
+
+@pytest.fixture(scope="module")
+def duo():
+    """Two tiny models + their params + a shared image set."""
+    ga, gb = tiny("a", 8), tiny("b", 12)
+    reg = ModelRegistry()
+    reg.add("a", ga, weight=2.0)
+    reg.add("b", gb)
+    rng = np.random.default_rng(0)
+    images = [
+        jnp.asarray(rng.standard_normal((1, 16, 16, 3)), jnp.float32)
+        for _ in range(8)
+    ]
+    return reg, images
+
+
+def _single_outputs(reg, name, images):
+    eng = SingleStageEngine(reg[name].graph, reg[name].params)
+    eng.warmup(images[0])
+    return eng.run(images)["outputs"]
+
+
+# ----------------------------------------------------------- share enumeration
+def test_enumerate_shares_disjoint_and_complete():
+    shares = enumerate_shares(PLAT, 2)
+    assert len(shares) == 23  # 5*5 compositions minus the two empty-share ones
+    for assignment in shares:
+        totals = {"B": 0, "s": 0}
+        for share in assignment:
+            assert sum(n for _, n in share) >= 1  # every model gets a core
+            for ct, n in share:
+                totals[ct] += n
+        assert totals == {"B": 4, "s": 4}  # disjoint and complete
+
+
+def test_enumerate_shares_rejects_impossible():
+    with pytest.raises(ValueError):
+        enumerate_shares(PLAT, 9)  # more models than cores
+    with pytest.raises(ValueError):
+        enumerate_shares(PLAT, 0)
+
+
+# ------------------------------------------------------------------ objective
+def test_partition_objective_weights_and_slos():
+    assert partition_objective([2.0, 3.0]) == pytest.approx(5.0)
+    assert partition_objective([2.0, 3.0], [10.0, 1.0]) == pytest.approx(23.0)
+    feasible = partition_objective([2.0, 3.0], None, [1.0, 1.0])
+    infeasible = partition_objective([2.0, 0.5], None, [1.0, 1.0])
+    assert feasible == pytest.approx(5.0)  # met SLOs cost nothing
+    assert infeasible < 0 < feasible  # any feasible outranks any infeasible
+    # infeasible assignments still order by how close they come
+    closer = partition_objective([2.0, 0.9], None, [1.0, 1.0])
+    assert infeasible < closer < feasible
+    # egalitarian mode scores the worst (weighted) model
+    assert partition_objective([2.0, 3.0], fairness="max-min") == pytest.approx(2.0)
+    assert partition_objective(
+        [2.0, 3.0], [10.0, 1.0], fairness="max-min"
+    ) == pytest.approx(3.0)
+    with pytest.raises(ValueError):
+        partition_objective([1.0], fairness="nope")
+
+
+def test_search_ranks_feasible_above_huge_infeasible():
+    """Feasibility is lexicographic in the search, not a finite penalty:
+    an assignment whose weighted sum dwarfs SLO_PENALTY but misses a
+    floor must still lose to a modest feasible one."""
+    from repro.core import CoreType, HeteroPlatform
+
+    plat = HeteroPlatform("b3", (CoreType("B", 3, 1.0),))
+    # "fast" throughput ~1e12 on 2 cores / ~5e11 on 1; "slo" needs 2
+    # cores to meet its 1.5 img/s floor.  A penalty-based scalar would
+    # hand both spare cores to "fast" (score ~1e12 swamps the ~3e8
+    # shortfall charge); lexicographic feasibility must not.
+    instances = {
+        "fast": [{("B", 1): 2e-12, ("B", 2): 1e-12, ("B", 3): 1e-12}],
+        "slo": [{("B", 1): 1.0, ("B", 2): 0.5, ("B", 3): 0.5}],
+    }
+    part = partition_search(instances, plat, slo_rates={"slo": 1.5})
+    assert part.feasible
+    assert part["slo"].throughput >= 1.5
+    assert part["fast"].share.total_cores() == 1  # paid for feasibility
+
+
+def test_partition_search_maxmin_balances_capacity(duo):
+    """Equal-demand operating point: the egalitarian partition's worst
+    model must do at least as well as under the utilitarian split."""
+    reg, _ = duo
+    planner = AutoPlanner(platform=PLAT, mode="best")
+    Ts = planner.time_matrices(reg.graphs())
+    psum = partition_search(Ts, PLAT)
+    pmin = partition_search(Ts, PLAT, fairness="max-min")
+    assert min(pmin.throughputs().values()) >= min(psum.throughputs().values())
+
+
+# ----------------------------------------------------- partition integration
+def test_partition_search_returns_valid_disjoint_plans(duo):
+    reg, _ = duo
+    planner = AutoPlanner(platform=PLAT, mode="best")
+    part = planner.partition(reg.graphs(), weights=reg.weights())
+    assert part.names == ["a", "b"]
+    totals = {"B": 0, "s": 0}
+    for mp in part.assignments:
+        n_layers = len(reg[mp.name].graph.descriptors())
+        flat = [l for stage in mp.plan.allocation for l in stage]
+        assert flat == list(range(n_layers))  # inner plan partitions layers
+        mp.plan.pipeline.validate_against(mp.share)  # and fits its share
+        for ct in mp.share.core_types:
+            totals[ct.name] += ct.count
+        assert mp.throughput > 0
+    assert totals == {"B": 4, "s": 4}
+    assert part.objective == pytest.approx(
+        partition_objective(
+            [part["a"].throughput, part["b"].throughput], [2.0, 1.0]
+        )
+    )
+
+
+def test_partition_search_slo_floor_shifts_capacity(duo):
+    reg, _ = duo
+    planner = AutoPlanner(platform=PLAT, mode="best")
+    Ts = planner.time_matrices(reg.graphs())
+    free = partition_search(Ts, PLAT)
+    # demand more from "b" than its unweighted share delivers (but less
+    # than it could get with the whole machine): the search must shift
+    # capacity toward "b" to stay feasible
+    alone = partition_search({"b": Ts["b"]}, PLAT)
+    slo = (free["b"].throughput + alone["b"].throughput) / 2
+    bound = partition_search(Ts, PLAT, slo_rates={"b": slo})
+    assert free["b"].throughput < slo  # the SLO really binds
+    assert bound.feasible
+    assert bound["b"].throughput >= slo
+    assert bound["a"].throughput <= free["a"].throughput  # paid by "a"
+
+
+# ------------------------------------------------------------------- registry
+def test_registry_coerce_forms():
+    g = tiny("x")
+    params = g.init(jax.random.PRNGKey(1))
+    reg = ModelRegistry.coerce(
+        {
+            "zoo": "squeezenet",  # zoo name
+            "graph": g,  # bare graph (params auto-init)
+            "entry": ModelEntry(name="entry", graph=g, params=params, weight=3.0),
+            "kwargs": {"graph": g, "weight": 2.0, "slo_rate": 1.5},
+        }
+    )
+    assert reg.names == ["zoo", "graph", "entry", "kwargs"]
+    assert reg["zoo"].graph.name == "squeezenet"
+    assert reg["graph"].params is not None
+    assert reg["entry"].weight == 3.0
+    assert reg.slo_rates()["kwargs"] == 1.5
+    assert ModelRegistry.coerce(reg) is reg  # idempotent
+
+
+def test_registry_rejects_bad_entries():
+    reg = ModelRegistry()
+    reg.add("a", tiny("a"))
+    with pytest.raises(ValueError):
+        reg.add("a", tiny("a2"))  # duplicate name
+    with pytest.raises(KeyError):
+        reg.add("nope-not-a-zoo-model")
+    with pytest.raises(ValueError):
+        reg.add("w", tiny("w"), weight=0.0)
+
+
+# ------------------------------------------------------------- serving router
+def test_multimodel_server_isolates_and_matches_baselines(duo):
+    reg, images = duo
+    planner = AutoPlanner(platform=PLAT, mode="best")
+    with planner.build_multi(reg, batch_size=2, flush_timeout_s=0.005) as mm:
+        res = mm.run({"a": images, "b": images})
+    for name in ("a", "b"):
+        ref = _single_outputs(reg, name, images)
+        for x, y in zip(ref, res["outputs"][name]):
+            np.testing.assert_allclose(
+                np.asarray(x), np.asarray(y), rtol=1e-4, atol=1e-5
+            )
+    m = res["metrics"]
+    assert m["completed"] == 2 * len(images)
+    assert m["models"]["a"]["completed"] == len(images)
+    assert m["models"]["b"]["completed"] == len(images)
+    assert m["router"]["a"]["admitted"] == len(images)
+    assert m["router"]["a"]["rejected"] == 0
+    assert m["aggregate_throughput_img_s"] > 0
+
+
+def test_router_unknown_model_and_admission_bound(duo):
+    reg, images = duo
+    planner = AutoPlanner(platform=PLAT, mode="best")
+    mm = planner.build_multi(reg, batch_size=1, max_inflight=2, warmup=False)
+    try:
+        with pytest.raises(KeyError):
+            mm.submit("nope", images[0])
+        # saturate "a"'s in-flight bound without letting workers drain
+        srv = mm.server("a")
+        srv._started = True  # freeze: no workers consume the ingress
+        mm.submit("a", images[0], block=False)
+        mm.submit("a", images[1], block=False)
+        with pytest.raises(AdmissionError):
+            mm.submit("a", images[2], block=False)
+        assert mm.router.rejected("a") == 1
+        assert mm.router.admitted("a") == 2
+        # "b" is unaffected by "a" hitting its bound (isolation)
+        t = mm.submit("b", images[0])
+        assert t.result(timeout=30.0) is not None
+        srv._spawn_workers()  # let "a"'s queued images drain for shutdown
+    finally:
+        mm.stop()
+
+
+def test_max_inflight_validation(duo):
+    """A typo'd model name or non-positive bound must fail loudly, not
+    silently disable admission control."""
+    reg, _ = duo
+    planner = AutoPlanner(platform=PLAT, mode="best")
+    part = planner.partition(reg.graphs())
+    with pytest.raises(ValueError):
+        MultiModelServer(reg, part, max_inflight={"a-typo": 4})
+    with pytest.raises(ValueError):
+        MultiModelServer(reg, part, max_inflight=0)
+    with pytest.raises(ValueError):
+        MultiModelServer(reg, part, max_inflight={"a": -1})
+    mm = MultiModelServer(reg, part, max_inflight={"a": 4})  # "b" unbounded
+    try:
+        assert mm._max_inflight == {"a": 4, "b": None}
+    finally:
+        mm.stop()
+
+
+def test_swap_partition_rejects_wrong_model_set(duo):
+    reg, images = duo
+    planner = AutoPlanner(platform=PLAT, mode="best")
+    part = planner.partition(reg.graphs())
+    only_a = ModelRegistry()
+    only_a.add("a", reg["a"].graph, reg["a"].params)
+    part_a = planner.partition(only_a.graphs())
+    mm = MultiModelServer(reg, part, batch_size=1)
+    try:
+        with pytest.raises(ValueError):
+            mm.swap_partition(part_a)
+    finally:
+        mm.stop()
+
+
+def test_swap_partition_mid_stream_no_drops(duo):
+    reg, images = duo
+    planner = AutoPlanner(platform=PLAT, mode="best")
+    Ts = planner.time_matrices(reg.graphs())
+    part1 = partition_search(Ts, PLAT, weights={"a": 5.0, "b": 1.0})
+    part2 = partition_search(Ts, PLAT, weights={"a": 1.0, "b": 5.0})
+    assert part1.plans() != part2.plans()  # the swap changes something
+    mm = MultiModelServer(reg, part1, batch_size=1, queue_depth=4)
+    try:
+        mm.start()
+        tickets = []
+        for i, img in enumerate(images):
+            tickets.append(("a", i, mm.submit("a", img)))
+            tickets.append(("b", i, mm.submit("b", img)))
+            if i == 2:
+                mm.swap_partition(part2)
+        assert mm.partition_epoch == 1
+        refs = {n: _single_outputs(reg, n, images) for n in ("a", "b")}
+        for name, i, t in tickets:
+            out = t.result(timeout=60.0)
+            np.testing.assert_allclose(
+                np.asarray(refs[name][i]), np.asarray(out), rtol=1e-4, atol=1e-5
+            )
+        assert mm.metrics()["completed"] == 2 * len(images)
+    finally:
+        mm.stop()
+
+
+def test_admission_bound_strict_under_concurrent_clients(duo):
+    """The in-flight bound is check-and-reserve, not check-then-act: N
+    racing clients must never exceed it."""
+    import threading
+
+    from repro.serving import MultiModelServer as MMS
+
+    reg, images = duo
+    planner = AutoPlanner(platform=PLAT, mode="best")
+    part = planner.partition(reg.graphs())
+    mm = MMS(reg, part, batch_size=1, queue_depth=8, max_inflight=2)
+    try:
+        srv = mm.server("a")
+        srv._started = True  # freeze: nothing drains, admissions only grow
+        admitted, rejected = [], []
+        gate = threading.Event()
+
+        def client(i):
+            gate.wait(10.0)
+            try:
+                admitted.append(mm.submit("a", images[0], block=False))
+            except AdmissionError:
+                rejected.append(i)
+
+        threads = [threading.Thread(target=client, args=(i,)) for i in range(8)]
+        for t in threads:
+            t.start()
+        gate.set()
+        for t in threads:
+            t.join(timeout=30.0)
+        assert len(admitted) == 2  # exactly the bound, never exceeded
+        assert len(rejected) == 6
+        assert mm.router.admitted("a") == 2 and mm.router.rejected("a") == 6
+        srv._spawn_workers()  # drain for a clean stop
+    finally:
+        mm.stop()
+
+
+def test_run_throttles_instead_of_raising_under_admission_bound(duo):
+    """run() owns both ends of the loop, so it retries its own admission
+    rejections instead of crashing on a bounded server."""
+    reg, images = duo
+    planner = AutoPlanner(platform=PLAT, mode="best")
+    with planner.build_multi(reg, batch_size=1, max_inflight=2) as mm:
+        res = mm.run({"a": images, "b": images})
+    assert res["metrics"]["completed"] == 2 * len(images)
+    for name in ("a", "b"):
+        assert len(res["outputs"][name]) == len(images)
+
+
+def test_attach_partition_adaptive_inherits_server_fairness(duo):
+    from repro.serving import attach_partition_adaptive
+
+    reg, _ = duo
+    planner = AutoPlanner(platform=PLAT, mode="best")
+    priors = planner.time_matrices(reg.graphs())
+    mm = planner.build_multi(reg, batch_size=1, warmup=False,
+                             fairness="max-min")
+    try:
+        monitor = attach_partition_adaptive(
+            mm, priors, PLAT, start=False
+        )
+        # the re-plan loop keeps the deployed objective unless overridden
+        assert monitor.controller.fairness == "max-min"
+        override = attach_partition_adaptive(
+            mm, priors, PLAT, fairness="sum", start=False
+        )
+        assert override.controller.fairness == "sum"
+    finally:
+        mm.stop()
+
+
+# --------------------------------------------------- global re-partitioning
+def _observations_for(partition, truths):
+    """What a monitor window would report if ``truths`` were the board."""
+    from repro.serving import StageObservation
+
+    out = {}
+    for mp in partition.assignments:
+        times = mp.plan.stage_times(truths[mp.name])
+        out[mp.name] = [
+            StageObservation(stage=stage, layers=tuple(layers), service_s=t,
+                             items=16)
+            for stage, layers, t in zip(
+                mp.plan.pipeline.stages, mp.plan.allocation, times
+            )
+        ]
+    return out
+
+
+def test_partition_controller_global_repartition_on_one_models_drift(duo):
+    from repro.core.calibration import scale_core_type
+
+    reg, _ = duo
+    planner = AutoPlanner(platform=PLAT, mode="best")
+    priors = planner.time_matrices(reg.graphs())
+    part = partition_search(priors, PLAT)
+    ctrl = PartitionController(
+        priors, part, PLAT,
+        config=AdaptiveConfig(threshold=0.25, patience=2, min_gain=1.02),
+    )
+    # steady state: truth == prior, no trigger ever
+    truths = {n: [dict(r) for r in priors[n]] for n in priors}
+    for _ in range(3):
+        assert ctrl.step(_observations_for(ctrl.partition, truths)) is None
+    assert ctrl.swaps == 0
+    # model "a"'s own workload shifts: ITS layers run 3x slower everywhere
+    # (input-distribution drift — a per-model effect, not a cluster one)
+    truths["a"] = scale_core_type(scale_core_type(truths["a"], "B", 3.0), "s", 3.0)
+    new = None
+    for _ in range(6):
+        new = ctrl.step(_observations_for(ctrl.partition, truths)) or new
+    assert new is not None and ctrl.swaps >= 1
+    ev = next(e for e in ctrl.history if e.swapped)
+    assert "a" in ev.triggered_by
+    # the re-partition must beat the old assignment on the drifted truth
+    old_tps = [ev.old_partition[n].plan.throughput(truths[n]) for n in ("a", "b")]
+    new_tps = [ev.new_partition[n].plan.throughput(truths[n]) for n in ("a", "b")]
+    assert partition_objective(new_tps) > partition_objective(old_tps)
+
+
+# ------------------------------------------------------------- one-call serve
+def test_serve_dict_returns_multimodel_server(duo):
+    reg, images = duo
+    mm = serve(
+        {"a": reg["a"].graph, "b": reg["b"].graph},
+        batch_size=2,
+        flush_timeout_s=0.005,
+    )
+    try:
+        assert isinstance(mm, MultiModelServer)
+        assert sorted(mm.servers) == ["a", "b"]
+        out = mm.submit("a", images[0]).result(timeout=30.0)
+        assert out is not None
+    finally:
+        mm.stop()
+
+
+def test_serve_dict_adaptive_attaches_partition_monitor(duo):
+    reg, images = duo
+    mm = serve(
+        {"a": reg["a"].graph, "b": reg["b"].graph},
+        batch_size=1,
+        adaptive=True,
+        adaptive_config=AdaptiveConfig(interval_s=0.05),
+    )
+    try:
+        assert mm.monitor is not None
+        mm.run({"a": images[:4], "b": images[:4]})
+        obs = mm.monitor.sample()  # per-model windows flow after traffic
+        assert set(obs) == {"a", "b"}
+    finally:
+        mm.stop()
+    assert mm.monitor.error is None
+
+
+def test_serve_dict_forwards_admission_and_fairness(duo):
+    reg, images = duo
+    mm = serve(
+        {"a": reg["a"].graph, "b": reg["b"].graph},
+        batch_size=1,
+        max_inflight=2,
+        fairness="max-min",
+    )
+    try:
+        assert mm._max_inflight == {"a": 2, "b": 2}
+        assert mm.fairness == "max-min"
+        res = mm.run({"a": images[:4], "b": images[:4]})  # throttles, no raise
+        assert res["metrics"]["completed"] == 8
+    finally:
+        mm.stop()
+
+
+def test_serve_single_model_rejects_multi_only_options(duo):
+    reg, _ = duo
+    with pytest.raises(ValueError):
+        serve(reg["a"].graph, max_inflight=4)
+    with pytest.raises(ValueError):
+        serve(reg["a"].graph, fairness="max-min")
+
+
+def test_partition_search_rejects_unknown_weight_slo_names(duo):
+    """A typo'd model name must not silently drop an SLO floor."""
+    reg, _ = duo
+    planner = AutoPlanner(platform=PLAT, mode="best")
+    Ts = planner.time_matrices(reg.graphs())
+    with pytest.raises(ValueError):
+        partition_search(Ts, PLAT, slo_rates={"a-typo": 1.0})
+    with pytest.raises(ValueError):
+        partition_search(Ts, PLAT, weights={"nope": 2.0})
+
+
+def test_run_times_out_instead_of_hanging_on_stalled_pipeline(duo):
+    """run()'s timeout bounds the whole call even when a pipeline wedges
+    (no workers draining): it must raise Backpressure at ~timeout, not
+    block forever in submit."""
+    from repro.serving import Backpressure, MultiModelServer as MMS
+
+    reg, images = duo
+    planner = AutoPlanner(platform=PLAT, mode="best")
+    part = planner.partition(reg.graphs())
+    mm = MMS(reg, part, batch_size=1, queue_depth=1)
+    try:
+        for srv in mm.servers.values():
+            srv._started = True  # freeze: ingress fills and never drains
+        t0 = time.perf_counter()
+        with pytest.raises(Backpressure):
+            mm.run({"a": images, "b": images}, timeout=1.0)
+        assert time.perf_counter() - t0 < 30.0  # bounded, not hung
+        for srv in mm.servers.values():
+            srv._spawn_workers()  # drain the queued images for clean stop
+    finally:
+        mm.stop()
+
+
+def test_serve_empty_dict_raises():
+    with pytest.raises(ValueError):
+        serve({})
