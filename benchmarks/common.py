@@ -12,8 +12,10 @@ A73@2.4 incl. IPC gap, DESIGN.md §2).
 """
 from __future__ import annotations
 
+import json
 import math
-from typing import Dict, List, Sequence, Tuple
+import os
+from typing import Any, Dict, List, Sequence, Tuple
 
 import numpy as np
 
@@ -165,3 +167,17 @@ def homogeneous_plan(n_layers: int, stage: StageConfig) -> PipelinePlan:
 
 def fmt_row(name: str, us: float, derived: str) -> str:
     return f"{name},{us:.2f},{derived}"
+
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def write_bench_json(filename: str, payload: Dict[str, Any]) -> str:
+    """Write a perf-trajectory JSON (``BENCH_*.json``) at the repo root —
+    the files CI archives and EXPERIMENTS.md quotes.  One shared writer so
+    every benchmark emits the same shape (``{"records": [...], ...}``)
+    from the same location.  Returns the path written."""
+    path = os.path.join(REPO_ROOT, filename)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path

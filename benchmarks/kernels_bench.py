@@ -19,9 +19,6 @@ geometry, backend): op, dims (N, K, M), backend, best block config, best
 time, GFLOP/s.  The CSV rows summarize; the JSON is the trajectory file
 CI and EXPERIMENTS.md quote.
 """
-import json
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -38,10 +35,8 @@ from repro.kernels.backend import finish_act, resolve_backend
 from repro.kernels.conv_fused import conv2d_fused
 from repro.kernels.gemm import gemm as pallas_gemm
 
-from .common import fmt_row
+from .common import fmt_row, write_bench_json
 
-_OUT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                    "BENCH_kernels.json")
 REPEATS = 3
 BACKENDS = ("xla", "pallas", "pallas_fused")
 
@@ -162,10 +157,10 @@ def run():
         ).max()
     )
 
-    with open(_OUT, "w") as f:
-        json.dump(
-            {"platform": jax.default_backend(), "records": records}, f, indent=1
-        )
+    write_bench_json(
+        "BENCH_kernels.json",
+        {"platform": jax.default_backend(), "records": records},
+    )
 
     rows = []
     for model in ("vgg16", "mobilenet"):

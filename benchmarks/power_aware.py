@@ -1,0 +1,219 @@
+"""Frequency- and power-aware planning on the simulated Hikey-970 board.
+
+Four scenarios, all on the ground-truth big.LITTLE matrix of
+``benchmarks/common.py`` with the DVFS-enabled ``hikey970()`` platform
+(Kirin-970-like OPP tables, ``P = C_eff * f * V(f)^2`` per cluster):
+
+* **iso_throughput** — the headline trade (ISSUE 5 acceptance): a
+  deployment must sustain a demand rate ``lambda = --demand x peak``.
+  The frequency-blind runtime (what this repo did before the governor)
+  races to idle: every stage at f_max.  The slack-clocked plan
+  (``assign_frequencies(objective="min_energy", min_throughput=lambda)``)
+  paces every stage to the demand instead.  Both serve the same stream at
+  the same rate — asserted: >= --min-energy-red (15%) modeled energy
+  reduction at < 2% delivered-throughput shortfall vs the demand.  The
+  busy-energy model charges the baseline NOTHING for its idle gaps, so
+  the reduction is conservative w.r.t. real silicon (DESIGN.md §7).
+* **structural_slack** — the same comparison at lambda = peak: only
+  non-bottleneck slack (from indivisible layers) is harvestable; reported
+  for honesty, no floor asserted (well-balanced plans have little slack).
+* **power_capped** — ``power_aware_search(power_cap_w=...)`` at a binding
+  cap (--cap-frac x all-max power; asserts the plan's modeled AND
+  simulated average power meet the cap) and at a non-binding cap (1.05x;
+  asserts >= 90% of the uncapped planner's throughput — ISSUE 5).
+* **throughput_per_watt** — the battery objective: best img/s/W plan vs
+  the all-max-frequency throughput plan.
+
+Every scenario cross-checks the analytic numbers against the
+discrete-event simulator (``simulate(stage_freqs=...)``) and the
+frequency-assignment search against its exhaustive oracle.  Records land
+in ``BENCH_power.json`` (via benchmarks/common.py) so CI tracks
+throughput/watt alongside img/s.
+
+    PYTHONPATH=src:. python -m benchmarks.power_aware
+    PYTHONPATH=src:. python -m benchmarks.power_aware --tiny   # CI smoke
+"""
+import argparse
+
+from repro.core import (
+    assign_frequencies,
+    evaluate_frequencies,
+    exhaustive_frequency_assignment,
+    hikey970,
+    max_freqs,
+    pipe_it_search,
+    power_aware_search,
+    simulate,
+)
+
+from .common import cnn_descriptors, fmt_row, gt_time_matrix, tiny_graph, write_bench_json
+
+PLAT = hikey970()  # DVFS-enabled OPP tables (common.PLAT is fixed-clock)
+DEMAND_FRAC = 0.75  # deployment demand rate as a fraction of peak
+CAP_FRAC = 0.55  # binding power cap as a fraction of the all-max envelope
+MIN_ENERGY_RED = 0.15  # acceptance floor at iso-throughput
+MAX_TP_LOSS = 0.02  # delivered-throughput shortfall tolerance vs demand
+N_IMAGES = 64
+
+
+def _sim(pplan, T):
+    return simulate(
+        pplan.plan, T, PLAT, n_images=N_IMAGES, stage_freqs=pplan.stage_freqs
+    )
+
+
+def _scenarios(model: str, descs, demand_frac, cap_frac):
+    T = gt_time_matrix(descs)
+    plan = pipe_it_search(len(T), PLAT, T, mode="best")
+    allmax = evaluate_frequencies(plan, T, PLAT, max_freqs(plan, PLAT))
+    records, rows = [], []
+
+    def record(scenario, pplan, sim, extra=""):
+        records.append(
+            {
+                "model": model,
+                "scenario": scenario,
+                "plan": pplan.plan.pipeline.notation(),
+                "stage_freqs_ghz": [
+                    None if f is None else round(f / 1e9, 3)
+                    for f in pplan.stage_freqs
+                ],
+                "throughput_img_s": pplan.throughput,
+                "avg_power_w": pplan.avg_power_w,
+                "energy_per_image_j": pplan.energy_per_image_j,
+                "throughput_per_watt": (
+                    pplan.throughput / pplan.avg_power_w
+                    if pplan.avg_power_w > 0
+                    else 0.0
+                ),
+                "sim_throughput_img_s": sim.steady_throughput,
+                "sim_avg_power_w": sim.avg_power_w,
+                "power_cap_w": pplan.power_cap_w,
+                "feasible": pplan.feasible,
+            }
+        )
+        rows.append(
+            fmt_row(
+                f"power_{model}_{scenario}",
+                1e6 / pplan.throughput,
+                f"tp={pplan.throughput:.2f}img/s power={pplan.avg_power_w:.2f}W "
+                f"energy={pplan.energy_per_image_j * 1e3:.1f}mJ/img "
+                f"@{'/'.join('fix' if f is None else f'{f / 1e9:.2f}G' for f in pplan.stage_freqs)}"
+                + (f" {extra}" if extra else ""),
+            )
+        )
+
+    # --- race-to-idle baseline (the pre-governor runtime) ------------------
+    record("all_max", allmax, _sim(allmax, T))
+
+    # --- structural slack only (iso-peak) ----------------------------------
+    slack_peak = assign_frequencies(plan, T, PLAT, objective="min_energy",
+                                    min_throughput=allmax.throughput)
+    red_peak = 1 - slack_peak.energy_per_image_j / allmax.energy_per_image_j
+    record("structural_slack", slack_peak, _sim(slack_peak, T),
+           extra=f"energy_red={red_peak * 100:.1f}% (no floor asserted)")
+
+    # --- iso-throughput at the demand rate (headline) ----------------------
+    demand = demand_frac * allmax.throughput
+    slack = assign_frequencies(plan, T, PLAT, objective="min_energy",
+                               min_throughput=demand)
+    oracle = exhaustive_frequency_assignment(plan, T, PLAT,
+                                             objective="min_energy",
+                                             min_throughput=demand)
+    assert abs(oracle.objective - slack.objective) <= 1e-12 * max(
+        1.0, abs(oracle.objective)
+    ), f"{model}: pruned frequency search diverged from the exhaustive oracle"
+    sim = _sim(slack, T)
+    energy_red = 1 - slack.energy_per_image_j / allmax.energy_per_image_j
+    tp_shortfall = max(0.0, 1 - slack.throughput / demand)
+    record("iso_throughput", slack, sim,
+           extra=f"demand={demand:.2f}img/s energy_red={energy_red * 100:.1f}% "
+                 f"shortfall={tp_shortfall * 100:.2f}%")
+    assert slack.feasible and tp_shortfall < MAX_TP_LOSS, (
+        f"{model}: slack-clocked capacity {slack.throughput:.2f} below "
+        f"demand {demand:.2f} (shortfall {tp_shortfall * 100:.2f}%)"
+    )
+    assert energy_red >= MIN_ENERGY_RED, (
+        f"{model}: {energy_red * 100:.1f}% energy reduction at iso-throughput "
+        f"is below the {MIN_ENERGY_RED * 100:.0f}% acceptance floor"
+    )
+    # simulator agrees with the analytic model on the busy-energy account
+    assert abs(sim.avg_power_w - slack.avg_power_w) / slack.avg_power_w < 0.25
+
+    # --- power-capped planning ---------------------------------------------
+    cap = cap_frac * allmax.avg_power_w
+    capped = power_aware_search(len(T), PLAT, T, mode="best", power_cap_w=cap)
+    simc = _sim(capped, T)
+    record("power_capped", capped, simc, extra=f"cap={cap:.2f}W")
+    assert capped.feasible and capped.avg_power_w <= cap * (1 + 1e-9), (
+        f"{model}: capped plan draws {capped.avg_power_w:.2f}W over the "
+        f"{cap:.2f}W cap"
+    )
+    assert simc.avg_power_w <= cap * 1.05, (
+        f"{model}: simulated power {simc.avg_power_w:.2f}W breaks the cap"
+    )
+
+    loose_cap = 1.05 * allmax.avg_power_w
+    loose = power_aware_search(len(T), PLAT, T, mode="best", power_cap_w=loose_cap)
+    record("non_binding_cap", loose, _sim(loose, T),
+           extra=f"cap={loose_cap:.2f}W "
+                 f"tp_ratio={loose.throughput / allmax.throughput:.3f}")
+    assert loose.throughput >= 0.90 * allmax.throughput, (
+        f"{model}: non-binding cap cost "
+        f"{(1 - loose.throughput / allmax.throughput) * 100:.1f}% throughput"
+    )
+
+    # --- throughput per watt ------------------------------------------------
+    perwatt = power_aware_search(len(T), PLAT, T, mode="best",
+                                 objective="throughput_per_watt")
+    record("throughput_per_watt", perwatt, _sim(perwatt, T),
+           extra=f"tp/W={perwatt.objective:.3f} vs "
+                 f"allmax={allmax.throughput / allmax.avg_power_w:.3f}")
+    assert perwatt.objective >= allmax.throughput / allmax.avg_power_w
+
+    return records, rows
+
+
+def run(models=("squeezenet", "alexnet"), tiny=False,
+        demand_frac=DEMAND_FRAC, cap_frac=CAP_FRAC):
+    all_records, all_rows = [], []
+    if tiny:
+        named = [("tinyA", tiny_graph("tinyA", 8).descriptors())]
+    else:
+        named = [(m, cnn_descriptors(m)) for m in models]
+    for model, descs in named:
+        records, rows = _scenarios(model, descs, demand_frac, cap_frac)
+        all_records.extend(records)
+        all_rows.extend(rows)
+    # tiny (CI-smoke) runs land in a gitignored side file so a local test
+    # run never dirties the committed zoo trajectory
+    write_bench_json(
+        "BENCH_power_tiny.json" if tiny else "BENCH_power.json",
+        {
+            "platform": PLAT.name,
+            "machine_envelope_w": PLAT.max_power_w(),
+            "demand_frac": demand_frac,
+            "cap_frac": cap_frac,
+            "records": all_records,
+        },
+    )
+    return all_rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--models", nargs="+", default=["squeezenet", "alexnet"])
+    ap.add_argument("--tiny", action="store_true",
+                    help="one tiny 16x16 CNN instead of zoo models (CI smoke)")
+    ap.add_argument("--demand", type=float, default=DEMAND_FRAC,
+                    help="iso-throughput demand rate as a fraction of peak")
+    ap.add_argument("--cap-frac", type=float, default=CAP_FRAC,
+                    help="binding power cap as a fraction of all-max power")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(tuple(args.models), args.tiny, args.demand, args.cap_frac):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

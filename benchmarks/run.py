@@ -22,6 +22,7 @@ from . import (
     fig13_quantization,
     kernels_bench,
     multimodel_serving,
+    power_aware,
     roofline_report,
     serving_pipeline,
     table3_prediction_error,
@@ -47,6 +48,7 @@ MODULES = [
     serving_pipeline,
     multimodel_serving,
     adaptive_replan,
+    power_aware,
     kernels_bench,
     tpu_pipeit_bench,
     roofline_report,

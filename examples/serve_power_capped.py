@@ -1,0 +1,129 @@
+"""Power-capped serving (the ISSUE 5 quickstart).
+
+Part 1 — one call: ``serve(power_cap_w=...)`` runs the DVFS-extended DSE
+(plan + per-stage OPP assignment under the cap) and attaches a
+``DvfsGovernor`` to the server; the governor snapshot shows the chosen
+clocks, the modeled average power, and the headroom under the cap.
+Traffic is served and outputs checked against the single-stage baseline.
+
+Part 2 — a thermal-throttle event on a governed fake-stage board (real
+jitted outputs, scripted ground-truth delays that SLOW DOWN when the
+governor down-clocks a cluster — the off-board analogue of cpufreq):
+mid-stream the power envelope drops, ``governor.throttle(new_cap)``
+re-plans under the new cap and hot-swaps through the drain-and-switch
+epoch protocol — no request dropped, outputs still exact, clocks visibly
+lower afterward.
+
+    PYTHONPATH=src:. python examples/serve_power_capped.py [n_images] [--tiny]
+"""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import gt_time_matrix, tiny_graph
+from repro.cnn import MODELS
+from repro.core import hikey970, pipe_it_search, power_aware_search
+from repro.serving import (
+    AdaptiveController,
+    DriftingMatrix,
+    DvfsGovernor,
+    PipelineServer,
+    SingleStageEngine,
+    governed_stage_fn_builder,
+    serve,
+)
+
+PLAT = hikey970()  # DVFS-enabled: Kirin-970-like OPP tables + power model
+
+
+def fmt_ghz(freqs):
+    return "/".join("fix" if f is None else f"{f / 1e9:.2f}G" for f in freqs)
+
+
+def main():
+    args = [a for a in sys.argv[1:] if a != "--tiny"]
+    tiny = "--tiny" in sys.argv[1:]
+    n_images = int(args[0]) if args else (8 if tiny else 12)
+    graph = tiny_graph("tinyA", 8) if tiny else MODELS["squeezenet"]()
+    params = graph.init(jax.random.PRNGKey(0))
+    descs = graph.descriptors()
+    T = gt_time_matrix(descs)
+    rng = np.random.default_rng(0)
+    images = [
+        jnp.asarray(rng.standard_normal((1, *graph.input_shape)), jnp.float32)
+        for _ in range(n_images)
+    ]
+    eng = SingleStageEngine(graph, params)
+    eng.warmup(images[0])
+    ref = eng.run(images)["outputs"]
+
+    envelope = PLAT.max_power_w()
+    cap = 0.55 * envelope
+    unconstrained = pipe_it_search(len(T), PLAT, T, mode="best")
+    print(f"machine envelope : {envelope:.2f} W (all cores at f_max)")
+    print(f"power cap        : {cap:.2f} W")
+    print(f"uncapped plan    : {unconstrained.pipeline.notation()}")
+
+    # ---- Part 1: one call from model to power-capped running server
+    server = serve(
+        graph, params=params, platform=PLAT, time_matrix=T,
+        batch_size=2, power_cap_w=cap,
+    )
+    snap = server.governor.snapshot()
+    print(f"capped plan      : {snap['plan']}")
+    print(f"modeled power    : {snap['predicted_avg_power_w']:.2f} W "
+          f"(headroom {cap - snap['predicted_avg_power_w']:+.2f} W)")
+    res = server.run(images)
+    server.stop()
+    for a, b in zip(ref, res["outputs"]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+    print(f"served           : {len(res['outputs'])} images, outputs equal "
+          "the single-stage baseline ✓")
+
+    # ---- Part 2: thermal event on a governed fake-stage board
+    print(f"\n--- thermal throttle on the governed board "
+          f"(cap {cap:.2f} W -> {0.30 * envelope:.2f} W) ---")
+    scale = 0.5 if tiny else 0.05
+    # normalise the scripted board so one image takes ~20ms of delays
+    k = 0.02 / (scale * unconstrained.bottleneck(T))
+    truth = DriftingMatrix([{s: t * k for s, t in r.items()} for r in T])
+    prior = truth.T
+    pplan = power_aware_search(len(T), PLAT, prior, mode="best", power_cap_w=cap)
+    controller = AdaptiveController(
+        prior=prior, plan=pplan.plan, platform=PLAT, power_cap_w=cap
+    )
+    governor = DvfsGovernor(PLAT, controller)  # server attaches below
+    board = PipelineServer(
+        graph, params, pplan.plan, batch_size=1, flush_timeout_s=0.0,
+        queue_depth=4,
+        stage_fn_builder=governed_stage_fn_builder(truth, governor, scale=scale),
+    )
+    governor.server = board
+    board.governor = governor
+    print(f"governed plan    : {governor.power_plan.notation()}")
+    board.start()
+    board.warmup()  # compile now so the rate numbers are steady-state
+    res = board.run(images)
+    print(f"pre-throttle     : {res['throughput']:.2f} img/s at "
+          f"{fmt_ghz(governor.stage_freqs)}")
+    new_cap = 0.30 * envelope
+    throttled = governor.throttle(new_cap)  # mid-life: epoch hot-swap if needed
+    print(f"re-planned       : {throttled.notation()}")
+    print(f"modeled power    : {throttled.avg_power_w:.2f} W "
+          f"(cap {new_cap:.2f} W, feasible={throttled.feasible})")
+    after = board.run(images)
+    board.stop()
+    print(f"post-throttle    : {after['throughput']:.2f} img/s at "
+          f"{fmt_ghz(governor.stage_freqs)} — no request dropped "
+          f"(epoch {board.epoch}, throttle events {governor.throttle_events})")
+    for a, b in zip(ref, after["outputs"]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+    print("outputs still equal the single-stage baseline ✓")
+
+
+if __name__ == "__main__":
+    main()

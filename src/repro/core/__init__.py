@@ -8,18 +8,30 @@ from .descriptors import ConvDescriptor, GemmDims, conv_descriptor, fc_descripto
 from .dse import (
     ModelPlan,
     PartitionPlan,
+    PowerAwarePlan,
+    assign_frequencies,
     enumerate_shares,
+    evaluate_frequencies,
+    exhaustive_frequency_assignment,
     exhaustive_partition,
     exhaustive_search,
     exhaustive_two_way_split,
     find_split,
+    max_freqs,
     merge_stage,
     partition_objective,
     partition_search,
     pipe_it_search,
+    power_aware_search,
+    stage_times_at,
     work_flow,
 )
-from .perfmodel import LayerTimePredictor, MultiCoreModel, SingleCoreModel
+from .perfmodel import (
+    FreqTimeMatrix,
+    LayerTimePredictor,
+    MultiCoreModel,
+    SingleCoreModel,
+)
 from .pipeline import (
     Pipeline,
     PipelinePlan,
@@ -41,16 +53,24 @@ __all__ = [
     "fc_descriptor",
     "ModelPlan",
     "PartitionPlan",
+    "PowerAwarePlan",
+    "assign_frequencies",
     "enumerate_shares",
+    "evaluate_frequencies",
+    "exhaustive_frequency_assignment",
     "exhaustive_partition",
     "exhaustive_search",
     "exhaustive_two_way_split",
     "find_split",
+    "max_freqs",
     "merge_stage",
     "partition_objective",
     "partition_search",
     "pipe_it_search",
+    "power_aware_search",
+    "stage_times_at",
     "work_flow",
+    "FreqTimeMatrix",
     "LayerTimePredictor",
     "MultiCoreModel",
     "SingleCoreModel",

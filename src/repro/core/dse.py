@@ -171,19 +171,16 @@ def merge_stage(
     return _plan(pipeline, alloc)
 
 
-def pipeline_sweep(
-    n_layers: int,
-    platform: HeteroPlatform,
-    T: TimeMatrix,
-) -> PipelinePlan:
-    """Beyond-paper mode: the number of distinct *pipelines* is small
-    (Eq. 1 gives 64 on the 4+4 platform) — the exponential blow-up is in
-    the split points, which ``work_flow`` resolves heuristically.  Running
-    work_flow on every pipeline is cheap and never worse than Algorithm 3
-    (recorded in DESIGN.md §2 / EXPERIMENTS.md §Perf as an improvement)."""
+def _sweep_plans(
+    n_layers: int, platform: HeteroPlatform, T: TimeMatrix
+) -> List[PipelinePlan]:
+    """The sweep-mode candidate set: every pipeline (plus the
+    single-cluster degenerates), work_flow(minmax)-balanced, empty stages
+    dropped.  Shared by :func:`pipeline_sweep` (throughput ranking) and
+    the power-aware search (its own objective) so both always explore the
+    SAME design space."""
     layers = list(range(n_layers))
-    best: Optional[PipelinePlan] = None
-    best_tp = -1.0
+    plans: List[PipelinePlan] = []
     h = platform.total_cores()
     for p in range(1, h + 1):
         pipes = (
@@ -194,13 +191,31 @@ def pipeline_sweep(
         for pipeline in pipes:
             alloc = work_flow(pipeline, layers, T, rule="minmax")
             kept = [(st, al) for st, al in zip(pipeline.stages, alloc) if al]
-            plan = _plan(
-                Pipeline(stages=tuple(st for st, _ in kept)),
-                tuple(al for _, al in kept),
+            plans.append(
+                _plan(
+                    Pipeline(stages=tuple(st for st, _ in kept)),
+                    tuple(al for _, al in kept),
+                )
             )
-            tp = plan.throughput(T)
-            if tp > best_tp:
-                best, best_tp = plan, tp
+    return plans
+
+
+def pipeline_sweep(
+    n_layers: int,
+    platform: HeteroPlatform,
+    T: TimeMatrix,
+) -> PipelinePlan:
+    """Beyond-paper mode: the number of distinct *pipelines* is small
+    (Eq. 1 gives 64 on the 4+4 platform) — the exponential blow-up is in
+    the split points, which ``work_flow`` resolves heuristically.  Running
+    work_flow on every pipeline is cheap and never worse than Algorithm 3
+    (recorded in DESIGN.md §2 / EXPERIMENTS.md §Perf as an improvement)."""
+    best: Optional[PipelinePlan] = None
+    best_tp = -1.0
+    for plan in _sweep_plans(n_layers, platform, T):
+        tp = plan.throughput(T)
+        if tp > best_tp:
+            best, best_tp = plan, tp
     assert best is not None
     return best
 
@@ -210,13 +225,27 @@ def pipe_it_search(
     platform: HeteroPlatform,
     T: TimeMatrix,
     mode: str = "merge",
+    *,
+    power_cap_w: Optional[float] = None,
+    objective: str = "throughput",
 ) -> PipelinePlan:
     """The Pipe-it DSE entry point (paper §VI).
 
     mode="merge"  — the paper's Algorithm 3 (faithful).
     mode="sweep"  — beyond-paper work_flow-over-all-pipelines.
     mode="best"   — run both, return the higher-throughput plan.
+
+    With ``power_cap_w`` set (watts of modeled average active power) or
+    ``objective="throughput_per_watt"``, the search gains the DVFS
+    dimension and returns a :class:`PowerAwarePlan` (plan + per-stage OPP
+    assignment) instead of a bare :class:`PipelinePlan` — see
+    :func:`power_aware_search`.
     """
+    if power_cap_w is not None or objective != "throughput":
+        return power_aware_search(
+            n_layers, platform, T, mode=mode,
+            power_cap_w=power_cap_w, objective=objective,
+        )
     if mode == "merge":
         return merge_stage(list(range(n_layers)), platform, T)
     if mode == "sweep":
@@ -226,6 +255,314 @@ def pipe_it_search(
         b = pipeline_sweep(n_layers, platform, T)
         return a if a.throughput(T) >= b.throughput(T) else b
     raise ValueError(f"unknown mode {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# Frequency- and power-aware planning: the DVFS dimension of the DSE
+# ---------------------------------------------------------------------------
+#
+# The paper plans only for peak img/s at an implicit fixed clock; edge
+# deployments plan under power/thermal envelopes (Synergy 1804.00706, PICO
+# 2206.08662).  This section adds per-stage frequency assignment on top of
+# the (pipeline x allocation) search: every stage picks an OPP from its
+# cluster's table (platform.py), stage times scale by (f_max/f)^kappa, and
+# plans are ranked by `objective` subject to an average-power cap
+#
+#     P_avg = sum_i P_i(f_i) * t_i(f_i) / max_i t_i(f_i)
+#
+# (each stage is busy t_i out of every cycle max_i t_i; idle power is not
+# modeled — DESIGN.md §7).  The assignment search is exact without being
+# exhaustive: for any target cycle time tau, the power-minimal assignment
+# clocks each stage at the LOWEST OPP meeting tau (power is monotone in f),
+# and the optimal tau equals some stage's time at some OPP — so scanning
+# the n_stages x n_OPP candidate taus covers the whole Pareto frontier.
+# "Race to idle" (everything at f_max) is always emitted as a candidate;
+# under the convex V(f) curve it loses to pace-to-bottleneck on energy,
+# which is exactly the trade the benchmark quantifies.
+
+#: Per-stage OPP choice; None marks a fixed-clock cluster's single level.
+FreqAssignment = Tuple[Optional[float], ...]
+
+#: "throughput" — max img/s (under the cap); "throughput_per_watt" — max
+#: img/s per modeled watt; "min_energy" — min energy per image subject to
+#: ``min_throughput`` (the iso-throughput / SLO-rate deployment: pace every
+#: stage to the demand, not to the silicon's peak).
+POWER_OBJECTIVES = ("throughput", "throughput_per_watt", "min_energy")
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerAwarePlan:
+    """A pipeline plan plus its per-stage frequency (DVFS) assignment."""
+
+    plan: PipelinePlan
+    stage_freqs: FreqAssignment
+    throughput: float  # Eq. 12 at the assigned frequencies (img/s)
+    avg_power_w: float  # modeled average active power over a cycle
+    energy_per_image_j: float  # sum_i P_i * t_i
+    objective: float  # the ranked score under `objective_name`
+    objective_name: str = "throughput"
+    power_cap_w: Optional[float] = None
+    feasible: bool = True  # avg_power_w <= power_cap_w (True when uncapped)
+
+    def notation(self) -> str:
+        freqs = "/".join(
+            "fix" if f is None else f"{f / 1e9:.2f}GHz" for f in self.stage_freqs
+        )
+        return f"{self.plan.notation()}  @ {freqs}"
+
+
+def stage_times_at(
+    plan: PipelinePlan,
+    T: TimeMatrix,
+    platform: HeteroPlatform,
+    stage_freqs: FreqAssignment,
+) -> List[float]:
+    """Per-stage service times with each stage at its assigned OPP."""
+    if len(stage_freqs) != plan.pipeline.p:
+        raise ValueError(
+            f"{len(stage_freqs)} stage_freqs for {plan.pipeline.p} stages"
+        )
+    return [
+        stage_time(T, layers, stage) * platform.freq_scale(stage[0], f)
+        for layers, stage, f in zip(
+            plan.allocation, plan.pipeline.stages, stage_freqs
+        )
+    ]
+
+
+def max_freqs(plan: PipelinePlan, platform: HeteroPlatform) -> FreqAssignment:
+    """The race-to-idle assignment: every stage at its cluster's top OPP."""
+    return tuple(
+        (platform.freq_levels(ct) or (None,))[-1]
+        for ct, _ in plan.pipeline.stages
+    )
+
+
+def evaluate_frequencies(
+    plan: PipelinePlan,
+    T: TimeMatrix,
+    platform: HeteroPlatform,
+    stage_freqs: FreqAssignment,
+    power_cap_w: Optional[float] = None,
+    objective: str = "throughput",
+    min_throughput: Optional[float] = None,
+) -> PowerAwarePlan:
+    """Score one (plan, frequency assignment) point of the design space."""
+    if objective not in POWER_OBJECTIVES:
+        raise ValueError(
+            f"unknown objective {objective!r}; one of {POWER_OBJECTIVES}"
+        )
+    times = stage_times_at(plan, T, platform, stage_freqs)
+    cycle = max(max(times), 1e-12)
+    energy = sum(
+        platform.active_power_w(stage[0], stage[1], f) * t
+        for stage, f, t in zip(plan.pipeline.stages, stage_freqs, times)
+    )
+    avg_power = energy / cycle
+    tp = 1.0 / cycle
+    if objective == "throughput_per_watt":
+        # Zero MODELED watts (fixed-clock clusters) reads as 'free'
+        # throughput: the epsilon floor makes such plans dominate powered
+        # ones (consistent with the model's claim that they cost nothing)
+        # while ranking among themselves by img/s — so on a fully
+        # fixed-clock platform the ordering degrades to plain throughput.
+        score = tp / max(avg_power, 1e-12)
+    elif objective == "min_energy":
+        # Same convention: zero modeled joules outranks any positive
+        # energy; among free plans, more img/s first (the tiny positive
+        # scale keeps every zero-energy score above every -energy one).
+        score = -energy if energy > 0.0 else tp * 1e-15
+    else:
+        score = tp
+    feasible = (
+        power_cap_w is None or avg_power <= power_cap_w * (1 + 1e-9)
+    ) and (min_throughput is None or tp >= min_throughput * (1 - 1e-9))
+    return PowerAwarePlan(
+        plan=plan,
+        stage_freqs=tuple(stage_freqs),
+        throughput=tp,
+        avg_power_w=avg_power,
+        energy_per_image_j=energy,
+        objective=score,
+        objective_name=objective,
+        power_cap_w=power_cap_w,
+        feasible=feasible,
+    )
+
+
+def _require_power_model(
+    platform: HeteroPlatform, power_cap_w: Optional[float]
+) -> None:
+    """A cap against a platform that models zero power would be *trivially*
+    satisfied — every plan draws 0 modeled watts — which silently tells the
+    caller their envelope is enforced when it was never evaluated."""
+    if power_cap_w is not None and platform.max_power_w() <= 0.0:
+        raise ValueError(
+            f"power_cap_w={power_cap_w} on platform {platform.name!r}, which "
+            "models no power (no OPP tables / zero capacitance) — the cap "
+            "would be vacuously met; use a DVFS platform like hikey970()"
+        )
+
+
+def _power_rank_key(
+    p: PowerAwarePlan,
+    power_cap_w: Optional[float] = None,
+    min_throughput: Optional[float] = None,
+):
+    """Feasible beats infeasible; among feasible, best objective then
+    least power.  Infeasible candidates rank by WHY they are infeasible:
+    a cap violation is a safety problem (least power first — closest to
+    the envelope), but a missed throughput floor with the cap intact
+    means demand outstrips capacity — best effort there is to run as
+    FAST as the cap allows, not to idle at minimum clocks."""
+    if p.feasible:
+        return (2, p.objective, -p.avg_power_w)
+    cap_ok = power_cap_w is None or p.avg_power_w <= power_cap_w * (1 + 1e-9)
+    if cap_ok:  # only the min_throughput floor is missed
+        return (1, p.throughput, -p.avg_power_w)
+    return (0, -p.avg_power_w, p.objective)
+
+
+def assign_frequencies(
+    plan: PipelinePlan,
+    T: TimeMatrix,
+    platform: HeteroPlatform,
+    power_cap_w: Optional[float] = None,
+    objective: str = "throughput",
+    min_throughput: Optional[float] = None,
+) -> PowerAwarePlan:
+    """Optimal per-stage OPP assignment for a fixed (pipeline, allocation).
+
+    Scans the candidate cycle times (every stage's time at every OPP —
+    the only values the optimum can take) and, per candidate tau, clocks
+    each stage at the lowest OPP meeting tau (slack-matched: a stage
+    never clocks above what the bottleneck needs).  Exact versus
+    :func:`exhaustive_frequency_assignment` because per-stage power is
+    monotone in f and stages are independent given tau.  The race-to-idle
+    (all-f_max) assignment is always a candidate; ``min_throughput`` adds
+    the iso-throughput floor (pace to the demand rate, not the silicon).
+    """
+    _require_power_model(platform, power_cap_w)
+    base = plan.stage_times(T)
+    per_stage: List[List[Tuple[Optional[float], float]]] = []
+    for i, (ct, _n) in enumerate(plan.pipeline.stages):
+        freqs = platform.freq_levels(ct) or (None,)
+        per_stage.append(
+            [(f, base[i] * platform.freq_scale(ct, f)) for f in freqs]
+        )
+    taus = sorted({t for opts in per_stage for _f, t in opts})
+    candidates: List[PowerAwarePlan] = [
+        evaluate_frequencies(
+            plan, T, platform, max_freqs(plan, platform),
+            power_cap_w, objective, min_throughput,
+        )  # race-to-idle
+    ]
+    miss = object()  # distinct from None: a fixed-clock stage's OPP IS None
+    for tau in taus:
+        freqs: List[Optional[float]] = []
+        for opts in per_stage:
+            pick = next(  # ascending f <=> descending t: first hit = lowest f
+                (f for f, t in opts if t <= tau * (1 + 1e-12)), miss
+            )
+            if pick is miss:  # tau faster than this stage's f_max
+                break
+            freqs.append(pick)
+        if len(freqs) != plan.pipeline.p:
+            continue
+        candidates.append(
+            evaluate_frequencies(
+                plan, T, platform, tuple(freqs),
+                power_cap_w, objective, min_throughput,
+            )
+        )
+    return max(
+        candidates,
+        key=lambda c: _power_rank_key(c, power_cap_w, min_throughput),
+    )
+
+
+def exhaustive_frequency_assignment(
+    plan: PipelinePlan,
+    T: TimeMatrix,
+    platform: HeteroPlatform,
+    power_cap_w: Optional[float] = None,
+    objective: str = "throughput",
+    min_throughput: Optional[float] = None,
+) -> PowerAwarePlan:
+    """Oracle: every per-stage OPP combination (|OPP|^p — small instances
+    only); tests bound :func:`assign_frequencies` against it."""
+    per_stage = [
+        platform.freq_levels(ct) or (None,) for ct, _ in plan.pipeline.stages
+    ]
+    best: Optional[PowerAwarePlan] = None
+    for combo in itertools.product(*per_stage):
+        cand = evaluate_frequencies(
+            plan, T, platform, combo, power_cap_w, objective, min_throughput
+        )
+        if best is None or _power_rank_key(
+            cand, power_cap_w, min_throughput
+        ) > _power_rank_key(best, power_cap_w, min_throughput):
+            best = cand
+    assert best is not None
+    return best
+
+
+def _candidate_plans(
+    n_layers: int, platform: HeteroPlatform, T: TimeMatrix, mode: str
+) -> List[PipelinePlan]:
+    """The plan candidates the selected DSE mode would consider, surfaced
+    so the power-aware search can re-rank them under its own objective
+    (the throughput-optimal pipeline is NOT always the capped or
+    per-watt-optimal one — e.g. a cap may favour fewer, slower stages)."""
+    if mode not in ("merge", "sweep", "best"):
+        raise ValueError(f"unknown mode {mode!r}")
+    plans: List[PipelinePlan] = []
+    if mode in ("merge", "best"):
+        plans.append(merge_stage(list(range(n_layers)), platform, T))
+    if mode in ("sweep", "best"):
+        plans.extend(_sweep_plans(n_layers, platform, T))
+    seen = set()
+    unique = []
+    for pl in plans:
+        key = (pl.pipeline.stages, pl.allocation)
+        if key not in seen:
+            seen.add(key)
+            unique.append(pl)
+    return unique
+
+
+def power_aware_search(
+    n_layers: int,
+    platform: HeteroPlatform,
+    T: TimeMatrix,
+    mode: str = "best",
+    power_cap_w: Optional[float] = None,
+    objective: str = "throughput",
+    min_throughput: Optional[float] = None,
+) -> PowerAwarePlan:
+    """The DVFS-extended DSE entry point: (pipeline x allocation x per-stage
+    OPP) ranked by ``objective`` under an average-power cap.
+
+    ``T`` stays the 2-D f_max time matrix (the factored form of the
+    (layer, config, freq) matrix — frequency enters via the platform's
+    ``freq_scale``, exactly how the calibrated corrections compose).
+    Returns the best feasible :class:`PowerAwarePlan`; if no candidate
+    meets the cap even fully down-clocked, the least-power assignment is
+    returned with ``feasible=False`` (best effort under overload) — the
+    caller decides whether to shed load instead.
+    """
+    _require_power_model(platform, power_cap_w)
+    best: Optional[PowerAwarePlan] = None
+    for pl in _candidate_plans(n_layers, platform, T, mode):
+        cand = assign_frequencies(
+            pl, T, platform, power_cap_w, objective, min_throughput
+        )
+        if best is None or _power_rank_key(
+            cand, power_cap_w, min_throughput
+        ) > _power_rank_key(best, power_cap_w, min_throughput):
+            best = cand
+    assert best is not None
+    return best
 
 
 # ---------------------------------------------------------------------------
@@ -403,6 +740,8 @@ class ModelPlan:
     share: HeteroPlatform
     plan: PipelinePlan
     throughput: float  # predicted Eq. 12 rate on this model's time matrix
+    # DVFS assignment for this model's stages (power-aware partitions only)
+    power: Optional[PowerAwarePlan] = None
 
     def notation(self) -> str:
         return f"{self.name}@{self.plan.notation()}"
@@ -415,6 +754,7 @@ class PartitionPlan:
     assignments: Tuple[ModelPlan, ...]
     objective: float
     feasible: bool  # every model met its SLO throughput floor
+    total_power_w: float = 0.0  # summed modeled avg power (power-aware only)
 
     @property
     def names(self) -> List[str]:
@@ -447,37 +787,51 @@ def _search_over_shares(
 ) -> PartitionPlan:
     """Rank every cluster-share assignment by the aggregate objective.
 
-    ``inner(model_index, share) -> PipelinePlan`` supplies the per-share
-    layer search; memoized per (model, share) because the same share
-    recurs across many assignments."""
-    cache: Dict[Tuple[int, Share], Tuple[HeteroPlatform, PipelinePlan, float]] = {}
+    ``inner(model_index, share) -> PipelinePlan | PowerAwarePlan`` supplies
+    the per-share layer (and, power-aware, frequency) search; memoized per
+    (model, share) because the same share recurs across many assignments."""
+    cache: Dict[
+        Tuple[int, Share],
+        Tuple[HeteroPlatform, PipelinePlan, float, Optional[PowerAwarePlan]],
+    ] = {}
 
     def solve(mi: int, share: Share):
         key = (mi, share)
         if key not in cache:
             sub = platform.subset(dict(share))
-            plan = inner(mi, sub)
-            cache[key] = (sub, plan, plan.throughput(Ts[mi]))
+            result = inner(mi, sub)
+            if isinstance(result, PowerAwarePlan):
+                cache[key] = (sub, result.plan, result.throughput, result)
+            else:
+                cache[key] = (sub, result, result.throughput(Ts[mi]), None)
         return cache[key]
 
     best: Optional[PartitionPlan] = None
     best_key = None
     for assignment in enumerate_shares(platform, len(names)):
         solved = [solve(mi, share) for mi, share in enumerate(assignment)]
-        tps = [tp for _, _, tp in solved]
+        tps = [tp for _, _, tp, _ in solved]
         score, shortfall = _objective_parts(tps, weights, slo_rates, fairness)
+        # power-infeasible shares count like SLO misses: a feasible
+        # assignment (cap met everywhere) beats any infeasible one
+        power_ok = all(pp is None or pp.feasible for _, _, _, pp in solved)
         # lexicographic: feasibility beats any score, then least miss,
         # then score — immune to throughputs outscaling the penalty
-        key = (shortfall == 0.0, -shortfall, score)
+        key = (shortfall == 0.0 and power_ok, -shortfall, score)
         if best_key is None or key > best_key:
             best_key = key
             best = PartitionPlan(
                 assignments=tuple(
-                    ModelPlan(name=nm, share=sub, plan=plan, throughput=tp)
-                    for nm, (sub, plan, tp) in zip(names, solved)
+                    ModelPlan(
+                        name=nm, share=sub, plan=plan, throughput=tp, power=pp
+                    )
+                    for nm, (sub, plan, tp, pp) in zip(names, solved)
                 ),
                 objective=score - SLO_PENALTY * shortfall,
-                feasible=shortfall == 0.0,
+                feasible=shortfall == 0.0 and power_ok,
+                total_power_w=sum(
+                    pp.avg_power_w for _, _, _, pp in solved if pp is not None
+                ),
             )
     assert best is not None
     return best
@@ -513,6 +867,8 @@ def partition_search(
     mode: str = "best",
     exact_threshold: int = 8,
     fairness: str = "sum",
+    power_cap_w: Optional[float] = None,
+    power_objective: str = "throughput",
 ) -> PartitionPlan:
     """Two-level DSE for multi-model co-serving.
 
@@ -526,11 +882,30 @@ def partition_search(
     ``instances`` maps model name -> that model's time matrix (order
     defines model order); ``weights``/``slo_rates``/``fairness`` feed
     :func:`partition_objective`.
+
+    ``power_cap_w`` bounds the MACHINE's modeled average active power:
+    each share receives a cap slice proportional to its all-max power
+    envelope (shares are disjoint, so the slices sum to the cap), and the
+    inner search gains the DVFS dimension (:func:`power_aware_search`)
+    under that slice and ``power_objective``.  Per-model frequency
+    assignments land on ``ModelPlan.power``; an assignment whose every
+    share meets its slice outranks any that does not.
     """
     names, Ts, w, slo = _normalize_instances(instances, weights, slo_rates)
+    _require_power_model(platform, power_cap_w)
+    power_aware = power_cap_w is not None or power_objective != "throughput"
+    machine_power = platform.max_power_w() if power_aware else 0.0
 
-    def inner(mi: int, sub: HeteroPlatform) -> PipelinePlan:
+    def inner(mi: int, sub: HeteroPlatform):
         n = len(Ts[mi])
+        if power_aware:
+            cap = None
+            if power_cap_w is not None and machine_power > 0.0:
+                cap = power_cap_w * sub.max_power_w() / machine_power
+            return power_aware_search(
+                n, sub, Ts[mi], mode=mode,
+                power_cap_w=cap, objective=power_objective,
+            )
         plan = pipe_it_search(n, sub, Ts[mi], mode=mode)
         if n <= exact_threshold:
             exact = _exhaustive_plan(n, sub, Ts[mi])

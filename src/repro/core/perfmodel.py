@@ -28,6 +28,10 @@ import numpy as np
 from .descriptors import ConvDescriptor, GemmDims
 from .platform import HeteroPlatform, StageConfig
 
+# DVFS-extended time matrix: T[layer][(core_type, count, freq_hz)] — the
+# (layer, config, freq) form; freq None marks a fixed-clock cluster.
+FreqTimeMatrix = List[Dict[Tuple[str, int, Optional[float]], float]]
+
 
 def _features(dims: GemmDims) -> np.ndarray:
     n, k, m = float(dims.N), float(dims.K), float(dims.M)
@@ -140,18 +144,29 @@ class LayerTimePredictor:
     platform: HeteroPlatform
     measured: Optional[Dict[str, float]] = None
 
-    def layer_time(self, desc: ConvDescriptor, stage: StageConfig) -> float:
+    def layer_time(
+        self,
+        desc: ConvDescriptor,
+        stage: StageConfig,
+        freq_hz: Optional[float] = None,
+    ) -> float:
+        """Predicted seconds for one layer on ``stage``, optionally at a
+        non-top OPP: the Eq. 5/8 prior (or a measured t1) is scaled by the
+        cluster's ``(f_max/f)^kappa`` latency factor (platform.py) — the
+        DVFS extension of the paper's frequency-blind model.  ``None``
+        means f_max, reproducing the legacy prediction exactly."""
         core_type, count = stage
+        scale = self.platform.freq_scale(core_type, freq_hz)
         if self.measured:
             from ..kernels.autotune import descriptor_key
 
             t1 = self.measured.get(descriptor_key(desc))
             if t1 is not None:
-                return self.model.predict_from_t1(
+                return scale * self.model.predict_from_t1(
                     desc.gemm_dims(), t1, cores=count,
                     speed=self.platform.speed(core_type),
                 )
-        return self.model.predict(
+        return scale * self.model.predict(
             desc.gemm_dims(), cores=count, speed=self.platform.speed(core_type)
         )
 
@@ -163,6 +178,26 @@ class LayerTimePredictor:
             {stage: self.layer_time(desc, stage) for stage in vocab}
             for desc in layers
         ]
+
+    def freq_time_matrix(
+        self, layers: Sequence[ConvDescriptor]
+    ) -> "FreqTimeMatrix":
+        """The DVFS-extended time matrix: ``T[l][(core_type, count, f)]``
+        over every stage configuration x the cluster's OPP table (a
+        fixed-clock cluster contributes one ``(ct, n, None)`` entry).
+        The planner's frequency-assignment search (core/dse.py) consumes
+        the equivalent factored form (2-D matrix x freq_scale) — this
+        explicit product form is the validation/reporting view."""
+        vocab = self.platform.stage_vocabulary()
+        out: FreqTimeMatrix = []
+        for desc in layers:
+            row: Dict[Tuple[str, int, Optional[float]], float] = {}
+            for stage in vocab:
+                freqs = self.platform.freq_levels(stage[0]) or (None,)
+                for f in freqs:
+                    row[(*stage, f)] = self.layer_time(desc, stage, f)
+            out.append(row)
+        return out
 
     def time_matrices(
         self, layers_by_model: "Mapping[str, Sequence[ConvDescriptor]]"

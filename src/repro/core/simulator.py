@@ -57,6 +57,12 @@ class SimResult:
     overall_throughput: float  # n_images / makespan
     stage_busy_s: List[float]
     finish_times: List[float]
+    # DVFS / power accounting (0.0 when the platform has no power model or
+    # no stage_freqs were assigned): active energy over the whole stream
+    # and its average over the makespan — the quantities power caps and
+    # the throughput/watt objective are stated in.
+    energy_j: float = 0.0
+    avg_power_w: float = 0.0
 
 
 def simulate(
@@ -65,14 +71,33 @@ def simulate(
     platform: HeteroPlatform,
     n_images: int = 50,
     boundary_bytes: Optional[Sequence[int]] = None,
+    stage_freqs: Optional[Sequence[Optional[float]]] = None,
 ) -> SimResult:
     """Simulate ``n_images`` flowing through the pipeline.
 
     ``boundary_bytes[i]`` is the activation size crossing the boundary
     between stage i and i+1 (0 => same cluster / negligible).
+
+    ``stage_freqs`` assigns each stage an OPP of its cluster (see
+    ``platform.freq_levels``): service times scale by ``(f_max/f)^kappa``
+    and each stage's busy time is charged the cluster's active power at
+    that OPP, filling ``SimResult.energy_j``/``avg_power_w`` — the
+    simulator-side ground truth the power-aware DSE is validated against.
     """
     p = plan.pipeline.p
     service = plan.stage_times(T)
+    stage_power = [0.0] * p
+    if stage_freqs is not None:
+        if len(stage_freqs) != p:
+            raise ValueError(f"{len(stage_freqs)} stage_freqs for {p} stages")
+        service = [
+            t * platform.freq_scale(stage[0], f)
+            for t, stage, f in zip(service, plan.pipeline.stages, stage_freqs)
+        ]
+        stage_power = [
+            platform.active_power_w(stage[0], stage[1], f)
+            for stage, f in zip(plan.pipeline.stages, stage_freqs)
+        ]
     if boundary_bytes is None:
         boundary_bytes = [0] * max(p - 1, 0)
 
@@ -105,10 +130,13 @@ def simulate(
         steady = (n_images - half) / max(finish[-1] - finish[half - 1], 1e-12)
     else:
         steady = n_images / max(makespan, 1e-12)
+    energy = sum(pw * b for pw, b in zip(stage_power, busy))
     return SimResult(
         makespan_s=makespan,
         steady_throughput=steady,
         overall_throughput=n_images / max(makespan, 1e-12),
         stage_busy_s=busy,
         finish_times=finish,
+        energy_j=energy,
+        avg_power_w=energy / max(makespan, 1e-12),
     )

@@ -14,6 +14,10 @@ paper's equations):
   running server in one call.
 * :mod:`.adaptive` — the closed loop: online calibrator → drift detector
   → re-plan → hot-swap (``serve(adaptive=True)``).
+* :mod:`.governor` — frequency/power: ``DvfsGovernor`` applies the
+  power-aware DSE's per-stage OPP assignment, normalizes observations
+  back to f_max, and re-plans on throttle events
+  (``serve(power_cap_w=...)``).
 * :mod:`.registry` / :mod:`.multimodel` — multi-model co-serving:
   ``ModelRegistry`` + ``MultiModelServer`` run one pipeline worker set
   per co-resident CNN on its cluster share (two-level partition DSE,
@@ -43,6 +47,12 @@ from .engine import (
     TimeSlicedEngine,
     build_stage_fns,
 )
+from .governor import (
+    DvfsGovernor,
+    attach_governor,
+    governed_stage_fn_builder,
+    run_governed_loop,
+)
 from .metrics import RouterMetrics, ServerMetrics, StageMetrics, percentile
 from .multimodel import (
     AdmissionError,
@@ -71,6 +81,10 @@ __all__ = [
     "Backpressure",
     "DriftDetector",
     "DriftingMatrix",
+    "DvfsGovernor",
+    "attach_governor",
+    "governed_stage_fn_builder",
+    "run_governed_loop",
     "ModelEntry",
     "ModelRegistry",
     "MultiModelMonitor",

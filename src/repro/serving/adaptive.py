@@ -47,7 +47,12 @@ import time
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 from ..core.calibration import apply_correction, scale_core_type
-from ..core.dse import pipe_it_search
+from ..core.dse import (
+    PowerAwarePlan,
+    assign_frequencies,
+    pipe_it_search,
+    power_aware_search,
+)
 from ..core.pipeline import PipelinePlan, TimeMatrix, stage_time
 from ..core.platform import HeteroPlatform, StageConfig
 from ..core.simulator import SimulatedClock, simulate
@@ -199,6 +204,9 @@ class AdaptiveController:
         platform: HeteroPlatform,
         mode: str = "best",
         config: Optional[AdaptiveConfig] = None,
+        power_cap_w: Optional[float] = None,
+        objective: str = "throughput",
+        min_throughput: Optional[float] = None,
     ):
         self.config = config or AdaptiveConfig()
         self.calibrator = OnlineCalibrator(prior, alpha=self.config.alpha)
@@ -209,11 +217,69 @@ class AdaptiveController:
         self.mode = mode
         self.plan = plan
         self.T_planned: TimeMatrix = self.calibrator.matrix()
+        # DVFS dimension (serving/governor.py drives these): when a power
+        # cap or a per-watt objective is set, re-plans run the power-aware
+        # search and `power_plan` carries the current per-stage OPPs.
+        self.power_cap_w = power_cap_w
+        self.objective = objective
+        self.min_throughput = min_throughput
+        self.power_plan: Optional[PowerAwarePlan] = None
+        if self.power_aware:
+            self.power_plan = assign_frequencies(
+                plan, self.T_planned, platform, power_cap_w, objective,
+                min_throughput,
+            )
         self.rounds = 0
         self.swaps = 0
         # Bounded: an oscillating environment re-plans forever and a
         # persistent server must not grow memory with uptime.
         self.history: Deque[ReplanEvent] = collections.deque(maxlen=256)
+
+    @property
+    def power_aware(self) -> bool:
+        return (
+            self.power_cap_w is not None
+            or self.objective != "throughput"
+            or self.min_throughput is not None
+        )
+
+    def replan_under_cap(
+        self, power_cap_w: Optional[float]
+    ) -> PowerAwarePlan:
+        """Throttle-event path (the governor's half of the loop): the power
+        envelope changed NOW — e.g. thermal firmware dropped the cap — so
+        re-plan unconditionally on the current calibrated belief under the
+        new cap.  No min-gain gate: the old plan may simply be infeasible
+        under the new envelope, and a cap *raise* should un-throttle
+        promptly.  Returns the new :class:`PowerAwarePlan`; the caller
+        (``DvfsGovernor``) applies frequencies and hot-swaps if the layer
+        allocation changed."""
+        self.power_cap_w = power_cap_w
+        T_new = self.calibrator.matrix()
+        self.T_planned = T_new
+        candidate = power_aware_search(
+            self.calibrator.n_layers, self.platform, T_new, mode=self.mode,
+            power_cap_w=power_cap_w, objective=self.objective,
+            min_throughput=self.min_throughput,
+        )
+        self.detector.reset()
+        swapped = candidate.plan != self.plan
+        old_tp = self.plan.throughput(T_new)
+        self.history.append(
+            ReplanEvent(
+                round=self.rounds,
+                deviation=0.0,  # not drift-triggered: the envelope moved
+                old_plan=self.plan,
+                new_plan=candidate.plan,
+                predicted_gain=candidate.throughput / max(old_tp, 1e-12),
+                swapped=swapped,
+            )
+        )
+        self.plan = candidate.plan
+        self.power_plan = candidate
+        if swapped:
+            self.swaps += 1
+        return candidate
 
     def step(
         self, observations: Sequence[StageObservation]
@@ -245,6 +311,8 @@ class AdaptiveController:
         self.calibrator.rebase(observations)
         T_new = self.calibrator.matrix()
         self.T_planned = T_new
+        if self.power_aware:
+            return self._power_step(T_new, deviation)
         candidate = pipe_it_search(
             self.calibrator.n_layers, self.platform, T_new, mode=self.mode
         )
@@ -267,6 +335,52 @@ class AdaptiveController:
         self.plan = candidate
         self.swaps += 1
         return candidate
+
+    def _power_step(
+        self, T_new: TimeMatrix, deviation: float
+    ) -> Optional[PipelinePlan]:
+        """The power-aware half of :meth:`step`: candidates are ranked by
+        the DVFS objective (capped throughput or throughput/watt), and the
+        kept plan's clocks are re-slack-matched either way — a frequency
+        retune needs no pipeline drain, so it is never gated on
+        ``min_gain``."""
+        keep = assign_frequencies(
+            self.plan, T_new, self.platform, self.power_cap_w,
+            self.objective, self.min_throughput,
+        )
+        candidate = power_aware_search(
+            self.calibrator.n_layers, self.platform, T_new, mode=self.mode,
+            power_cap_w=self.power_cap_w, objective=self.objective,
+            min_throughput=self.min_throughput,
+        )
+        if keep.objective > 0.0:
+            gain = candidate.objective / max(keep.objective, 1e-12)
+        else:
+            # "min_energy" scores are negative joules (bigger = better):
+            # gain must still read "x1.2 = 20% better", so invert the ratio
+            # on the negative axis (keep=-1.0J, candidate=-0.8J -> 1.25).
+            gain = keep.objective / min(candidate.objective, -1e-12)
+        swapped = (
+            candidate.plan != self.plan
+            and (gain >= self.config.min_gain or (candidate.feasible and not keep.feasible))
+        )
+        self.history.append(
+            ReplanEvent(
+                round=self.rounds,
+                deviation=deviation,
+                old_plan=self.plan,
+                new_plan=candidate.plan,
+                predicted_gain=gain,
+                swapped=swapped,
+            )
+        )
+        if not swapped:
+            self.power_plan = keep  # free retune: clocks follow the belief
+            return None
+        self.plan = candidate.plan
+        self.power_plan = candidate
+        self.swaps += 1
+        return candidate.plan
 
 
 # ---------------------------------------------------------------------------
@@ -335,9 +449,15 @@ class AdaptiveMonitor:
         server: PipelineServer,
         controller: AdaptiveController,
         interval_s: Optional[float] = None,
+        governor=None,
     ):
         self.server = server
         self.controller = controller
+        # Optional serving/governor.py attachment: observations are
+        # normalized back to f_max before calibration (a down-clocked
+        # stage must not read as cluster drift) and every control decision
+        # re-applies the planned per-stage OPPs.
+        self.governor = governor
         self.interval_s = (
             interval_s
             if interval_s is not None
@@ -366,9 +486,15 @@ class AdaptiveMonitor:
         observations = self.sample()
         if not observations:
             return None
+        if self.governor is not None:
+            observations = self.governor.normalize(observations)
         prev_plan, prev_swaps = self.controller.plan, self.controller.swaps
+        prev_pplan = self.controller.power_plan
         new_plan = self.controller.step(observations)
         if new_plan is None:
+            if self.governor is not None and self.controller.power_plan is not None:
+                # frequency-only retune: no drain, just new clocks
+                self.governor.apply(self.controller.power_plan)
             return None
         try:
             self.server.swap_plan(new_plan)
@@ -379,11 +505,14 @@ class AdaptiveMonitor:
             # and will re-attempt the swap on the next trigger.
             self.controller.plan = prev_plan
             self.controller.swaps = prev_swaps
+            self.controller.power_plan = prev_pplan
             if self.controller.history:
                 self.controller.history[-1] = dataclasses.replace(
                     self.controller.history[-1], swapped=False
                 )
             raise
+        if self.governor is not None and self.controller.power_plan is not None:
+            self.governor.apply(self.controller.power_plan)
         return new_plan
 
     def _loop(self) -> None:
@@ -481,21 +610,38 @@ class SimulatedServing:
         self.platform = platform
         self.n_images_per_round = n_images_per_round
         self.clock = clock if clock is not None else SimulatedClock()
-        # Steady-state throughput of the plan most recently observe()d —
-        # saves callers a second identical simulate() per round.
+        # Steady-state throughput / power of the plan most recently
+        # observe()d — saves callers a second identical simulate() per round.
         self.last_throughput = 0.0
+        self.last_power_w = 0.0
+        self.last_energy_j = 0.0
 
     def inject_drift(self, core_type: str, factor: float) -> None:
         """One cluster becomes uniformly ``factor`` x slower from now on."""
         self.truth.scale(core_type, factor)
 
-    def observe(self, plan: PipelinePlan) -> List[StageObservation]:
+    def observe(
+        self,
+        plan: PipelinePlan,
+        stage_freqs: Optional[Sequence[Optional[float]]] = None,
+    ) -> List[StageObservation]:
+        """One sampling window; ``stage_freqs`` runs the board's clusters
+        at the governor's assigned OPPs (frequency-dependent stage times
+        and modeled power come from core/simulator.py)."""
         result = simulate(
-            plan, self.truth.T, self.platform, n_images=self.n_images_per_round
+            plan, self.truth.T, self.platform,
+            n_images=self.n_images_per_round, stage_freqs=stage_freqs,
         )
         self.clock.advance(result.makespan_s)
         self.last_throughput = result.steady_throughput
+        self.last_power_w = result.avg_power_w
+        self.last_energy_j = result.energy_j
         times = plan.stage_times(self.truth.T)
+        if stage_freqs is not None:
+            times = [
+                t * self.platform.freq_scale(stage[0], f)
+                for t, stage, f in zip(times, plan.pipeline.stages, stage_freqs)
+            ]
         return [
             StageObservation(
                 stage=stage,
@@ -508,11 +654,27 @@ class SimulatedServing:
             )
         ]
 
-    def throughput(self, plan: PipelinePlan) -> float:
+    def throughput(
+        self,
+        plan: PipelinePlan,
+        stage_freqs: Optional[Sequence[Optional[float]]] = None,
+    ) -> float:
         """Steady-state throughput of ``plan`` on the CURRENT truth."""
         return simulate(
-            plan, self.truth.T, self.platform, n_images=self.n_images_per_round
+            plan, self.truth.T, self.platform,
+            n_images=self.n_images_per_round, stage_freqs=stage_freqs,
         ).steady_throughput
+
+    def power(
+        self,
+        plan: PipelinePlan,
+        stage_freqs: Optional[Sequence[Optional[float]]] = None,
+    ) -> float:
+        """Modeled average active power of ``plan`` on the CURRENT truth."""
+        return simulate(
+            plan, self.truth.T, self.platform,
+            n_images=self.n_images_per_round, stage_freqs=stage_freqs,
+        ).avg_power_w
 
 
 def run_adaptive_loop(

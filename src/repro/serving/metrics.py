@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import math
 import threading
 import time
 from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
@@ -38,14 +39,24 @@ EPOCH_HISTORY = 64
 
 
 def percentile(samples: Sequence[float], q: float) -> float:
-    """Nearest-rank percentile (q in [0, 100]); 0.0 on empty input."""
+    """Nearest-rank percentile (q in [0, 100]); 0.0 on empty input.
+
+    The textbook nearest-rank method: the P-th percentile of N ordered
+    samples is the value at (1-based) rank ``ceil(P/100 * N)``.  An
+    earlier version used Python's ``round()`` (banker's rounding) over a
+    0-based interpolation index, which e.g. picked the LOWER of the two
+    middle ranks for p50 of an even window — inconsistent with the
+    documented method and with itself across window sizes (round-half-to-
+    even flips direction with the parity of the half-rank).  Pinned by
+    regression fixtures in tests/test_serving.py.
+    """
     if not samples:
         return 0.0
     xs = sorted(samples)
-    if len(xs) == 1:
+    if q <= 0.0:
         return xs[0]
-    rank = max(0, min(len(xs) - 1, round(q / 100.0 * (len(xs) - 1))))
-    return xs[int(rank)]
+    rank = min(len(xs), math.ceil(q / 100.0 * len(xs)))  # 1-based
+    return xs[rank - 1]
 
 
 @dataclasses.dataclass

@@ -38,11 +38,17 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import logging
 import threading
 import time
 from typing import Any, Deque, Dict, List, Mapping, Optional, Sequence, Union
 
-from ..core.dse import PartitionPlan, partition_objective, partition_search
+from ..core.dse import (
+    PartitionPlan,
+    evaluate_frequencies,
+    partition_objective,
+    partition_search,
+)
 from ..core.pipeline import TimeMatrix
 from ..core.platform import HeteroPlatform
 from .adaptive import (
@@ -61,6 +67,11 @@ from .server import (
     ServingError,
     Ticket,
 )
+
+# Absorbed-by-design failure sites (context-manager unwinding, rollback of
+# a broken server) log here instead of passing silently — see the matching
+# policy note in serving/server.py.
+logger = logging.getLogger(__name__)
 
 __all__ = [
     "AdmissionError",
@@ -211,11 +222,15 @@ class MultiModelServer:
     def __exit__(self, exc_type, exc, tb) -> None:
         if exc_type is None:
             self.stop()
-        else:
+        else:  # don't mask the caller's exception with a shutdown error
             try:
                 self.stop()
             except Exception:
-                pass
+                logger.exception(
+                    "multi-model server: stop() raised while unwinding %s "
+                    "(absorbed so the caller's original exception propagates)",
+                    exc_type.__name__,
+                )
 
     # -------------------------------------------------------------- routing
     def server(self, model: str) -> PipelineServer:
@@ -379,7 +394,14 @@ class MultiModelServer:
                             self.partition[name].plan, timeout=timeout
                         )
                     except BaseException:  # noqa: BLE001 — server is broken;
-                        pass  # its worker error resurfaces on stop()
+                        # its worker error resurfaces on stop(); log now so
+                        # the rollback failure is visible at the moment the
+                        # partition diverged from self.partition
+                        logger.exception(
+                            "swap_partition rollback failed for model %r "
+                            "(server broken; original swap error re-raised, "
+                            "worker error will resurface on stop())", name,
+                        )
                 raise
             self.partition = partition
             self.partition_epoch += 1
@@ -449,6 +471,8 @@ class PartitionController:
         config: Optional[AdaptiveConfig] = None,
         exact_threshold: int = 8,
         fairness: str = "sum",
+        power_cap_w: Optional[float] = None,
+        power_objective: str = "throughput",
     ):
         if sorted(priors) != sorted(partition.names):
             raise ValueError("priors must cover exactly the partition's models")
@@ -457,6 +481,11 @@ class PartitionController:
         self.mode = mode
         self.exact_threshold = exact_threshold
         self.fairness = fairness
+        # DVFS dimension: re-partitions run the power-aware inner search
+        # under the machine cap; a throttle event updates the cap via
+        # throttle() and re-partitions unconditionally.
+        self.power_cap_w = power_cap_w
+        self.power_objective = power_objective
         self.weights = dict(weights or {})
         self.slo_rates = dict(slo_rates or {})
         self.partition = partition
@@ -483,13 +512,68 @@ class PartitionController:
         self, partition: PartitionPlan, Ts: Mapping[str, TimeMatrix]
     ) -> float:
         names = partition.names
-        tps = [partition[n].plan.throughput(Ts[n]) for n in names]
+        # A power-aware partition runs at its ASSIGNED clocks: score it
+        # there, not at f_max — otherwise a binding cap makes every
+        # candidate (scored down-clocked) look worse than the incumbent
+        # (scored full-clock) and drift re-partitions never pass the gate.
+        tps = []
+        for n in names:
+            mp = partition[n]
+            if mp.power is not None:
+                tps.append(
+                    evaluate_frequencies(
+                        mp.plan, Ts[n], self.platform, mp.power.stage_freqs
+                    ).throughput
+                )
+            else:
+                tps.append(mp.plan.throughput(Ts[n]))
         return partition_objective(
             tps,
             [self.weights.get(n, 1.0) for n in names],
             [self.slo_rates.get(n, 0.0) for n in names],
             self.fairness,
         )
+
+    def _search(self, Ts: Mapping[str, TimeMatrix]) -> PartitionPlan:
+        return partition_search(
+            Ts,
+            self.platform,
+            weights=self.weights,
+            slo_rates=self.slo_rates,
+            mode=self.mode,
+            exact_threshold=self.exact_threshold,
+            fairness=self.fairness,
+            power_cap_w=self.power_cap_w,
+            power_objective=self.power_objective,
+        )
+
+    def throttle(self, power_cap_w: Optional[float]) -> PartitionPlan:
+        """The machine's power envelope changed: re-partition NOW under the
+        new cap on the current calibrated beliefs, no gain gate (the old
+        partition may be infeasible under the new envelope).  The caller
+        hot-swaps via ``MultiModelServer.swap_partition``."""
+        self.power_cap_w = power_cap_w
+        Ts = {n: self.calibrators[n].matrix() for n in self.partition.names}
+        self.T_planned = Ts
+        for det in self.detectors.values():
+            det.reset()
+        candidate = self._search(Ts)
+        swapped = candidate.plans() != self.partition.plans()
+        self.history.append(
+            PartitionEvent(
+                round=self.rounds,
+                triggered_by=("power_cap",),
+                old_partition=self.partition,
+                new_partition=candidate,
+                predicted_gain=candidate.objective
+                / max(abs(self._objective_of(self.partition, Ts)), 1e-12),
+                swapped=swapped,
+            )
+        )
+        self.partition = candidate
+        if swapped:
+            self.swaps += 1
+        return candidate
 
     def step(
         self, observations: Mapping[str, Sequence[StageObservation]]
@@ -531,15 +615,7 @@ class PartitionController:
             det.reset()
         Ts = {name: self.calibrators[name].matrix() for name in self.partition.names}
         self.T_planned = Ts
-        candidate = partition_search(
-            Ts,
-            self.platform,
-            weights=self.weights,
-            slo_rates=self.slo_rates,
-            mode=self.mode,
-            exact_threshold=self.exact_threshold,
-            fairness=self.fairness,
-        )
+        candidate = self._search(Ts)
         current_score = self._objective_of(self.partition, Ts)
         gain = candidate.objective / max(abs(current_score), 1e-12)
         if current_score > 0.0:
@@ -665,6 +741,8 @@ def attach_partition_adaptive(
     config: Optional[AdaptiveConfig] = None,
     fairness: Optional[str] = None,
     exact_threshold: int = 8,
+    power_cap_w: Optional[float] = None,
+    power_objective: str = "throughput",
     start: bool = True,
 ) -> MultiModelMonitor:
     """Wire the global re-partition loop onto a running multi-model server
@@ -684,6 +762,8 @@ def attach_partition_adaptive(
         config=config,
         fairness=fairness if fairness is not None else mserver.fairness,
         exact_threshold=exact_threshold,
+        power_cap_w=power_cap_w,
+        power_objective=power_objective,
     )
     monitor = MultiModelMonitor(mserver, controller)
     mserver.monitor = monitor

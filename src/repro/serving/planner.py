@@ -31,11 +31,18 @@ import jax
 from ..cnn.graph import Graph
 from ..cnn.models import MODELS
 from ..core.calibration import calibrate, synthetic_model
-from ..core.dse import PartitionPlan, partition_search, pipe_it_search
+from ..core.dse import (
+    PartitionPlan,
+    PowerAwarePlan,
+    partition_search,
+    pipe_it_search,
+    power_aware_search,
+)
 from ..core.perfmodel import LayerTimePredictor
 from ..core.pipeline import PipelinePlan, TimeMatrix
 from ..core.platform import CoreType, HeteroPlatform, hikey970
 from .adaptive import AdaptiveConfig, attach_adaptive
+from .governor import attach_governor
 from .multimodel import MultiModelServer, attach_partition_adaptive
 from .registry import ModelRegistry
 from .server import PipelineServer
@@ -114,6 +121,24 @@ class AutoPlanner:
         T = self.time_matrix(graph) if T is None else T
         return self.search(len(graph.descriptors()), T)
 
+    def power_plan(
+        self,
+        graph: Graph,
+        T: Optional[TimeMatrix] = None,
+        *,
+        power_cap_w: Optional[float] = None,
+        objective: str = "throughput",
+        min_throughput: Optional[float] = None,
+    ) -> PowerAwarePlan:
+        """The DVFS-extended DSE: plan + per-stage OPP assignment under an
+        average-power cap (:func:`repro.core.dse.power_aware_search`)."""
+        T = self.time_matrix(graph) if T is None else T
+        return power_aware_search(
+            len(graph.descriptors()), self.platform, T, mode=self.mode,
+            power_cap_w=power_cap_w, objective=objective,
+            min_throughput=min_throughput,
+        )
+
     # ------------------------------------------------------- multi-model path
     def time_matrices(
         self, graphs: Mapping[str, Graph]
@@ -133,6 +158,8 @@ class AutoPlanner:
         slo_rates: Optional[Mapping[str, float]] = None,
         exact_threshold: int = 8,
         fairness: str = "sum",
+        power_cap_w: Optional[float] = None,
+        power_objective: str = "throughput",
     ) -> PartitionPlan:
         """Two-level DSE: clusters across models, layers within each share
         (:func:`repro.core.dse.partition_search`)."""
@@ -146,6 +173,8 @@ class AutoPlanner:
             mode=self.mode,
             exact_threshold=exact_threshold,
             fairness=fairness,
+            power_cap_w=power_cap_w,
+            power_objective=power_objective,
         )
 
     def build_multi(
@@ -160,6 +189,8 @@ class AutoPlanner:
         warmup: bool = True,
         stage_fn_builders=None,
         fairness: str = "sum",
+        power_cap_w: Optional[float] = None,
+        power_objective: str = "throughput",
     ) -> MultiModelServer:
         """Partition the platform across the registry's models and
         construct a (warmed, started) :class:`MultiModelServer`."""
@@ -169,6 +200,8 @@ class AutoPlanner:
             weights=registry.weights(),
             slo_rates=registry.slo_rates(),
             fairness=fairness,
+            power_cap_w=power_cap_w,
+            power_objective=power_objective,
         )
         mserver = MultiModelServer(
             registry,
@@ -198,11 +231,16 @@ class AutoPlanner:
         seed: int = 0,
         warmup: bool = True,
         stage_fn_builder=None,
+        plan: Optional[PipelinePlan] = None,
     ) -> PipelineServer:
-        """Plan the pipeline and construct a (warmed, started) server."""
+        """Plan the pipeline and construct a (warmed, started) server.
+
+        ``plan`` overrides the DSE (the power-aware path plans once via
+        :meth:`power_plan` and hands the resulting allocation in here)."""
         if params is None:
             params = graph.init(jax.random.PRNGKey(seed))
-        plan = self.plan(graph, time_matrix)
+        if plan is None:
+            plan = self.plan(graph, time_matrix)
         server = PipelineServer(
             graph,
             params,
@@ -239,8 +277,23 @@ def serve(
     tuner=None,
     max_inflight=None,
     fairness: Optional[str] = None,
+    power_cap_w: Optional[float] = None,
+    power_objective: str = "throughput",
+    min_throughput: Optional[float] = None,
 ) -> PipelineServer:
     """One call from model name (or Graph) to a running PipelineServer.
+
+    **Power-aware serving**: ``power_cap_w`` (watts of modeled average
+    active power on the planning platform) and/or
+    ``power_objective="throughput_per_watt"`` switch the DSE to the
+    DVFS-extended search (:func:`repro.core.dse.power_aware_search`) —
+    the plan carries a per-stage OPP assignment, non-bottleneck stages
+    are down-clocked to the slack-matched level, and the server gets a
+    :class:`~repro.serving.governor.DvfsGovernor` on ``server.governor``
+    (``server.governor.throttle(new_cap)`` is the thermal-event entry
+    point; with ``adaptive=True`` the control loop also normalizes
+    observations through it).  Multi-model: the cap bounds the whole
+    machine and each share's inner search runs under its slice.
 
     With ``adaptive=True`` the server also gets the closed control loop
     of :mod:`repro.serving.adaptive`: a monitor thread calibrates the
@@ -282,6 +335,12 @@ def serve(
     from ..kernels.backend import measure_graph_routes, resolve_backend
 
     if isinstance(model, (Mapping, ModelRegistry)):
+        if min_throughput is not None:
+            raise ValueError(
+                "min_throughput is a single-model option; multi-model "
+                "throughput floors are per-model SLOs — set slo_rate on the "
+                "registry entries instead"
+            )
         return _serve_multi(
             ModelRegistry.coerce(model),
             mode=mode,
@@ -300,6 +359,8 @@ def serve(
             tuner=tuner,
             max_inflight=max_inflight,
             fairness=fairness if fairness is not None else "sum",
+            power_cap_w=power_cap_w,
+            power_objective=power_objective,
         )
     if max_inflight is not None or fairness is not None:
         raise ValueError(
@@ -329,6 +390,19 @@ def serve(
         tuner=tuner,
     )
     T = planner.time_matrix(graph) if time_matrix is None else time_matrix
+    # min_throughput alone also arms the power path: the floor is enforced
+    # as DVFS-feasibility, never silently dropped
+    power_aware = (
+        power_cap_w is not None
+        or power_objective != "throughput"
+        or min_throughput is not None
+    )
+    pplan = None
+    if power_aware:
+        pplan = planner.power_plan(
+            graph, T, power_cap_w=power_cap_w, objective=power_objective,
+            min_throughput=min_throughput,
+        )
     server = planner.build(
         graph,
         params,
@@ -339,8 +413,23 @@ def serve(
         seed=seed,
         warmup=warmup,
         stage_fn_builder=stage_fn_builder,
+        plan=pplan.plan if pplan is not None else None,
     )
-    if adaptive:
+    if power_aware:
+        # the governor owns the clocks; its monitor thread only runs when
+        # the caller asked for the adaptive loop (throttle() works either way)
+        attach_governor(
+            server,
+            prior=T,
+            platform=planner.platform,
+            power_cap_w=power_cap_w,
+            objective=power_objective,
+            min_throughput=min_throughput,
+            mode=mode,
+            config=adaptive_config,
+            start=adaptive,
+        )
+    elif adaptive:
         attach_adaptive(
             server,
             prior=T,
@@ -370,6 +459,8 @@ def _serve_multi(
     tuner,
     max_inflight,
     fairness: str,
+    power_cap_w: Optional[float] = None,
+    power_objective: str = "throughput",
 ) -> MultiModelServer:
     """The multi-model arm of :func:`serve`.
 
@@ -427,6 +518,8 @@ def _serve_multi(
         stage_fn_builders=builders,
         max_inflight=max_inflight,
         fairness=fairness,
+        power_cap_w=power_cap_w,
+        power_objective=power_objective,
     )
     if adaptive:
         attach_partition_adaptive(
@@ -435,5 +528,7 @@ def _serve_multi(
             platform=planner.platform,
             mode=mode,
             config=adaptive_config,
+            power_cap_w=power_cap_w,
+            power_objective=power_objective,
         )
     return mserver

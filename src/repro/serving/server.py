@@ -28,6 +28,8 @@ runs the paper's DSE (Algorithms 1-3) to pick the stage plan first.
 """
 from __future__ import annotations
 
+import itertools
+import logging
 import queue
 import threading
 import time
@@ -44,6 +46,12 @@ from .engine import build_stage_fns
 from .metrics import ServerMetrics
 
 _SENTINEL = object()
+
+# Failures on the egress/callback/shutdown paths are absorbed by design
+# (a user callback must not kill the egress worker; a flush error must not
+# mask the caller's exception) — but absorbed NEVER means silent: every
+# such site logs here with enough context (ticket id, path) to debug.
+logger = logging.getLogger(__name__)
 
 
 class ServingError(RuntimeError):
@@ -62,10 +70,14 @@ class Ticket:
     """A pending result for one submitted image (a minimal future)."""
 
     __slots__ = (
-        "submitted_at", "_event", "_value", "_error", "_callbacks", "_cb_lock"
+        "id", "submitted_at", "_event", "_value", "_error", "_callbacks",
+        "_cb_lock",
     )
 
+    _ids = itertools.count()  # monotone ids for log/trace context
+
     def __init__(self, submitted_at: float):
+        self.id = next(Ticket._ids)
         self.submitted_at = submitted_at
         self._event = threading.Event()
         self._value: Optional[jnp.ndarray] = None
@@ -89,7 +101,11 @@ class Ticket:
             try:
                 cb(self)
             except Exception:  # noqa: BLE001 — a callback must not kill egress
-                pass
+                logger.exception(
+                    "ticket %d done-callback %r raised on the egress path "
+                    "(callback error absorbed; ticket already %s)",
+                    self.id, cb, "failed" if self._error is not None else "resolved",
+                )
 
     def add_done_callback(self, fn) -> None:
         """Run ``fn(ticket)`` when the ticket resolves or fails; runs
@@ -104,7 +120,10 @@ class Ticket:
         try:
             fn(self)
         except Exception:  # noqa: BLE001 — symmetric with _finish
-            pass
+            logger.exception(
+                "ticket %d done-callback %r raised (already-done path; "
+                "error absorbed)", self.id, fn,
+            )
 
     def done(self) -> bool:
         return self._event.is_set()
@@ -190,6 +209,9 @@ class PipelineServer:
         # Optional adaptive-control attachment (serving/adaptive.py); when
         # set, stop() shuts it down before draining the pipeline.
         self.monitor = None
+        # Optional DVFS attachment (serving/governor.py): owns the live
+        # per-stage frequency assignment; passive (no thread of its own).
+        self.governor = None
         self._lock = threading.Lock()
         # Serializes ingress puts against stop()'s shutdown sentinel: a
         # submit that passed the closed-check is guaranteed to land its
@@ -371,7 +393,11 @@ class PipelineServer:
             try:
                 self.stop()
             except Exception:
-                pass
+                logger.exception(
+                    "server %r: stop() raised while unwinding %s (absorbed "
+                    "so the caller's original exception propagates)",
+                    self.name, exc_type.__name__,
+                )
 
     def _warm(self, fns) -> None:
         env = {
@@ -570,11 +596,18 @@ class PipelineServer:
         """A worker died: close the server, fail every pending ticket, and
         poison every queue so all peer workers exit."""
         with self._lock:
-            if self._error is None:
+            first = self._error is None
+            if first:
                 self._error = error
             self._closed = True
             pending = list(self._inflight)
             self._inflight.clear()
+        if first:  # loud at the moment of death, not only on stop()
+            logger.error(
+                "server %r (epoch %d): pipeline worker failed, closing and "
+                "failing %d in-flight ticket(s)",
+                self.name, self._epoch, len(pending), exc_info=error,
+            )
         reason = ServingError(f"pipeline worker failed: {error!r}")
         for t in pending:
             t._fail(reason)

@@ -21,8 +21,12 @@ from repro.cnn.graph import Graph
 from repro.core import (
     LayerTimePredictor,
     SimulatedClock,
+    assign_frequencies,
+    evaluate_frequencies,
     hikey970,
+    max_freqs,
     pipe_it_search,
+    power_aware_search,
     scale_core_type,
 )
 from repro.core.calibration import synthetic_model
@@ -34,15 +38,19 @@ from repro.serving import (
     Backpressure,
     DriftDetector,
     DriftingMatrix,
+    DvfsGovernor,
     OnlineCalibrator,
     PipelineServer,
+    PipelinedGraphEngine,
     ServerClosed,
     ServingError,
     SimulatedServing,
     SingleStageEngine,
     StageObservation,
     delayed_stage_fn_builder,
+    governed_stage_fn_builder,
     run_adaptive_loop,
+    run_governed_loop,
     serve,
 )
 
@@ -364,6 +372,160 @@ def test_monitor_failure_surfaces_on_stop(tiny):
     assert monitor.error is not None
     with pytest.raises(ServingError, match="adaptive monitor failed"):
         srv.stop()
+
+
+# --------------------------------------------- governor / throttle (ISSUE 5)
+def test_governor_normalizes_dvfs_so_downclocking_is_not_drift():
+    """A slack-clocked (down-clocked) board must NOT read as cluster
+    drift: the governed loop runs rounds at reduced clocks with zero
+    spurious swaps, while the ungoverned controller seeing the same raw
+    observations would have triggered."""
+    descs = _net(12)
+    T = _matrix(descs)
+    cap = 0.55 * 6.6
+    pplan = power_aware_search(12, PLAT, T, mode="best", power_cap_w=cap)
+    ctrl = AdaptiveController(
+        prior=T, plan=pplan.plan, platform=PLAT, power_cap_w=cap
+    )
+    gov = DvfsGovernor(PLAT, ctrl)
+    env = SimulatedServing(T, PLAT)
+    run_governed_loop(gov, env, rounds=6)
+    assert ctrl.swaps == 0  # down-clocked != drifted
+    # same observations fed RAW (no normalization) do look like drift
+    ctrl2 = AdaptiveController(prior=T, plan=pplan.plan, platform=PLAT)
+    env2 = SimulatedServing(T, PLAT)
+    fired = False
+    for _ in range(6):
+        obs = env2.observe(ctrl2.plan, stage_freqs=pplan.stage_freqs)
+        det = ctrl2.detector
+        fired = fired or det.update(
+            ctrl2.plan.bottleneck(ctrl2.T_planned),
+            max(o.service_s for o in obs),
+        )
+    assert fired
+
+
+def test_governor_throttle_replans_under_new_cap_simulated():
+    """ISSUE 5 satellite (simulated-clock loop): a mid-stream power-cap
+    drop re-plans under the new cap; the applied clocks satisfy it on the
+    board's ground truth, and the whole trajectory is deterministic."""
+    descs = _net(12)
+    T = _matrix(descs)
+    envelope = PLAT.max_power_w()
+
+    def trajectory():
+        pplan = power_aware_search(
+            12, PLAT, T, mode="best", power_cap_w=envelope
+        )
+        ctrl = AdaptiveController(
+            prior=T, plan=pplan.plan, platform=PLAT, power_cap_w=envelope
+        )
+        gov = DvfsGovernor(PLAT, ctrl)
+        clock = SimulatedClock()
+        env = SimulatedServing(T, PLAT, clock=clock)
+        run_governed_loop(gov, env, rounds=3)
+        pre_power = env.power(ctrl.plan, gov.stage_freqs)
+        new_cap = 0.40 * envelope
+        assert pre_power > new_cap  # the drop is binding
+        gov.throttle(new_cap)
+        traj = run_governed_loop(gov, env, rounds=3)
+        post_power = env.power(ctrl.plan, gov.stage_freqs)
+        return ctrl, gov, clock.now(), pre_power, post_power, traj
+
+    ctrl, gov, t_end, pre, post, traj = trajectory()
+    new_cap = 0.40 * PLAT.max_power_w()
+    assert ctrl.power_cap_w == new_cap
+    assert gov.power_plan.feasible
+    assert post <= new_cap * 1.001  # the board now runs under the cap
+    assert gov.throttle_events == 1
+    assert all(r["power_w"] <= new_cap * 1.001 for r in traj)
+    # bit-for-bit reproducible
+    ctrl2, gov2, t_end2, pre2, post2, traj2 = trajectory()
+    assert (t_end2, pre2, post2) == (t_end, pre, post)
+    assert gov2.power_plan.stage_freqs == gov.power_plan.stage_freqs
+
+
+def test_governor_throttle_live_server_zero_drops_outputs_bitwise(tiny):
+    """ISSUE 5 satellite (runtime half): a mid-stream cap drop hot-swaps
+    the allocation; zero tickets are dropped and every output is
+    BITWISE-equal to a same-plan engine baseline (the swap spans two
+    plans, so each output must match one of the two references)."""
+    g, params, images, ref, T, _plan = tiny
+    n = len(g.descriptors())
+    truth = DriftingMatrix(T)
+    envelope = PLAT.max_power_w()
+    cap0 = 1.05 * envelope
+    pplan0 = power_aware_search(n, PLAT, T, mode="best", power_cap_w=cap0)
+    # deep throttle: the optimum migrates to a Small-cluster pipeline, so
+    # the event must change the layer allocation, not just the clocks
+    new_cap = 0.08 * envelope
+    pplan1 = power_aware_search(n, PLAT, T, mode="best", power_cap_w=new_cap)
+    assert pplan1.plan != pplan0.plan  # the throttle must force a hot-swap
+    ctrl = AdaptiveController(
+        prior=T, plan=pplan0.plan, platform=PLAT, power_cap_w=cap0
+    )
+    gov = DvfsGovernor(PLAT, ctrl)
+    srv = PipelineServer(
+        g, params, pplan0.plan, batch_size=1, flush_timeout_s=0.0,
+        queue_depth=4,
+        stage_fn_builder=governed_stage_fn_builder(truth, gov, scale=20.0),
+    )
+    gov.server = srv
+    srv.governor = gov
+    srv.start()
+    srv.warmup()
+    tickets = []
+
+    def feed():
+        for img in images:
+            tickets.append(srv.submit(img))
+            time.sleep(0.002)
+
+    feeder = threading.Thread(target=feed)
+    feeder.start()
+    time.sleep(0.02)
+    got = gov.throttle(new_cap)  # mid-stream: drain-and-switch epoch swap
+    feeder.join()
+    outs = [t.result(timeout=60.0) for t in tickets]
+    srv.stop()
+    assert len(outs) == len(images)  # zero dropped
+    assert srv.epoch == 1 and srv.plan == pplan1.plan
+    assert got.feasible and got.avg_power_w <= new_cap * (1 + 1e-9)
+    assert gov.stage_freqs == pplan1.stage_freqs
+    # bitwise: same jitted stage fns as a per-plan engine baseline
+    refs = []
+    for pp in (pplan0, pplan1):
+        eng = PipelinedGraphEngine(g, params, pp.plan)
+        eng.warmup(images[0])
+        refs.append(eng.run(images)["outputs"])
+    for i, o in enumerate(outs):
+        assert any(
+            np.array_equal(np.asarray(o), np.asarray(r[i])) for r in refs
+        ), f"image {i}: output bitwise-equal to neither epoch's baseline"
+
+
+def test_governor_throttle_unthrottles_on_cap_raise():
+    descs = _net(10)
+    T = _matrix(descs)
+    envelope = PLAT.max_power_w()
+    low = power_aware_search(10, PLAT, T, mode="best",
+                             power_cap_w=0.35 * envelope)
+    ctrl = AdaptiveController(
+        prior=T, plan=low.plan, platform=PLAT, power_cap_w=0.35 * envelope
+    )
+    gov = DvfsGovernor(PLAT, ctrl)
+    restored = gov.throttle(1.05 * envelope)  # thermal headroom returns
+    uncapped = pipe_it_search(10, PLAT, T, mode="best")
+    assert restored.throughput >= 0.90 * uncapped.throughput(T)
+
+
+def test_governor_requires_power_aware_controller():
+    descs = _net(6)
+    T = _matrix(descs)
+    plan = pipe_it_search(6, PLAT, T, mode="best")
+    ctrl = AdaptiveController(prior=T, plan=plan, platform=PLAT)
+    with pytest.raises(ValueError):
+        DvfsGovernor(PLAT, ctrl)
 
 
 @pytest.mark.slow

@@ -41,6 +41,7 @@ def test_quickstart_example():
     assert "Throughput gain: +" in out
 
 
+@pytest.mark.slow  # ~47s: a real 60-step training run (CI: -m slow step)
 def test_train_example_learns():
     out = _run([sys.executable, "examples/train_smollm.py", "60"])
     assert "LEARNED" in out
@@ -69,6 +70,33 @@ def test_serve_multimodel_example():
     assert "no request dropped" in out
 
 
+def test_serve_power_capped_example():
+    out = _run(
+        [sys.executable, "examples/serve_power_capped.py", "--tiny"],
+        env=dict(ENV, REPRO_PALLAS_INTERPRET="1"),
+    )
+    assert "capped plan" in out
+    assert "re-planned" in out and "thermal throttle" in out
+    assert "no request dropped" in out
+    assert "outputs still equal the single-stage baseline" in out
+
+
+def test_power_benchmark_smoke():
+    """Tiny power benchmark: the >=15% iso-throughput energy cut, the cap
+    satisfaction, and the oracle-match asserts run INSIDE the benchmark."""
+    out = _run(
+        [sys.executable, "-m", "benchmarks.power_aware", "--tiny"],
+        env=dict(ENV, REPRO_PALLAS_INTERPRET="1"),
+    )
+    assert "iso_throughput" in out and "energy_red=" in out
+    assert "power_capped" in out and "non_binding_cap" in out
+    import json
+    with open(os.path.join(REPO, "BENCH_power_tiny.json")) as f:
+        data = json.load(f)
+    assert data["records"] and all("throughput_per_watt" in r for r in data["records"])
+
+
+@pytest.mark.slow  # ~6 min: full 10-arch TPU Pipe-it sweep (CI: -m slow step)
 def test_pipeit_tpu_example():
     out = _run([sys.executable, "examples/pipeit_tpu.py"], timeout=560)
     assert "gain vs TP16" in out

@@ -18,6 +18,7 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 # ------------------------------------------------------------- tpu_pipeit
+@pytest.mark.slow  # ~130s over 10 archs: heavy stage-planning sweeps
 @pytest.mark.parametrize("arch", ARCHS)
 def test_plan_stages_valid_partition(arch):
     cfg = get_config(arch)

@@ -490,6 +490,52 @@ def test_serve_dict_forwards_admission_and_fairness(duo):
         mm.stop()
 
 
+def test_serve_dict_power_cap_partitions_under_machine_cap(duo):
+    """serve({...}, power_cap_w=...) threads the machine cap through the
+    two-level DSE: every model's share carries a feasible DVFS assignment
+    and the partition's summed power respects the cap."""
+    reg, images = duo
+    cap = 0.5 * PLAT.max_power_w()
+    mm = serve(
+        {"a": reg["a"].graph, "b": reg["b"].graph},
+        platform=PLAT,
+        batch_size=1,
+        power_cap_w=cap,
+    )
+    try:
+        assert mm.partition.feasible
+        assert mm.partition.total_power_w <= cap * (1 + 1e-9)
+        for mp in mm.partition.assignments:
+            assert mp.power is not None and mp.power.feasible
+            assert mp.power.stage_freqs  # the plan carries its clocks
+        out = mm.submit("a", images[0]).result(timeout=60.0)
+        assert out is not None
+    finally:
+        mm.stop()
+
+
+def test_partition_controller_throttle_replans_under_new_cap(duo):
+    """PartitionController.throttle: a machine-cap drop re-partitions
+    unconditionally on the calibrated beliefs under the new cap."""
+    reg, _ = duo
+    planner = AutoPlanner(platform=PLAT, mode="best")
+    Ts = planner.time_matrices({n: reg[n].graph for n in reg.names})
+    part = planner.partition(
+        {n: reg[n].graph for n in reg.names}, Ts,
+        power_cap_w=PLAT.max_power_w(),
+    )
+    ctrl = PartitionController(
+        priors=Ts, partition=part, platform=PLAT,
+        power_cap_w=PLAT.max_power_w(),
+    )
+    new_cap = 0.3 * PLAT.max_power_w()
+    candidate = ctrl.throttle(new_cap)
+    assert ctrl.power_cap_w == new_cap
+    assert candidate.feasible
+    assert candidate.total_power_w <= new_cap * (1 + 1e-9)
+    assert ctrl.history and ctrl.history[-1].triggered_by == ("power_cap",)
+
+
 def test_serve_single_model_rejects_multi_only_options(duo):
     reg, _ = duo
     with pytest.raises(ValueError):

@@ -278,6 +278,67 @@ def test_metrics_sanity(setup):
         assert 0 < s["service_p50_s"] <= s["service_p95_s"] <= s["service_p99_s"]
 
 
+def test_percentile_nearest_rank_pinned():
+    """Regression (ISSUE 5): nearest-rank must use the ceil formula,
+    rank = ceil(q/100 * N), 1-based.  The old round()-based index used
+    banker's rounding over (N-1), which e.g. returned 51 for p50 of
+    1..100 and drifted with window parity."""
+    from repro.serving import percentile
+
+    assert percentile([], 50) == 0.0
+    assert percentile([7.0], 99) == 7.0
+    # even window: p50 is the ceil(0.5*N)=N/2-th value (the LOWER middle)
+    assert percentile([1.0, 2.0, 3.0, 4.0], 50) == 2.0
+    assert percentile([10.0, 20.0], 50) == 10.0
+    # odd window: the true middle
+    assert percentile([1.0, 2.0, 3.0, 4.0, 5.0], 50) == 3.0
+    xs = [float(i) for i in range(1, 101)]
+    assert percentile(xs, 50) == 50.0  # old code: 51.0 (round-half-even up)
+    assert percentile(xs, 95) == 95.0
+    assert percentile(xs, 99) == 99.0
+    assert percentile(xs, 100) == 100.0
+    assert percentile(xs, 0) == 1.0
+    # small fixture windows the serving dashboards actually see
+    win = [0.010, 0.012, 0.011, 0.013, 0.050, 0.012, 0.011, 0.012]
+    assert percentile(win, 50) == 0.012
+    assert percentile(win, 95) == 0.050
+    assert percentile(win, 99) == 0.050
+    # unsorted input is sorted internally, input order must not matter
+    assert percentile(list(reversed(xs)), 95) == 95.0
+
+
+def test_done_callback_error_is_logged_not_lost(setup, caplog):
+    """ISSUE 5 satellite: a raising add_done_callback must be routed
+    through the module logger (with the ticket id) — absorbed, never able
+    to kill the egress worker, and the stream keeps serving."""
+    import logging
+
+    g, params, images, plan = setup
+    boom_calls = []
+
+    def boom(t):
+        boom_calls.append(t.id)
+        raise RuntimeError("callback boom")
+
+    with PipelineServer(g, params, plan, batch_size=2,
+                        flush_timeout_s=0.005) as srv:
+        with caplog.at_level(logging.ERROR, logger="repro.serving.server"):
+            t0 = srv.submit(images[0])
+            t0.add_done_callback(boom)
+            assert t0.result(timeout=60.0) is not None  # resolved despite boom
+            # egress survived: later traffic still flows end to end
+            later = [srv.submit(img) for img in images[1:]]
+            for t in later:
+                assert t.result(timeout=60.0) is not None
+            # already-done path logs too (symmetric contract)
+            t0.add_done_callback(boom)
+    assert boom_calls == [t0.id, t0.id]  # fired exactly once per registration
+    records = [r for r in caplog.records if "done-callback" in r.message]
+    assert len(records) == 2
+    assert all(str(t0.id) in r.getMessage() for r in records)
+    assert all(r.exc_info is not None for r in records)  # traceback kept
+
+
 # -------------------------------------------------------------- auto-planner
 def test_serve_one_call(setup):
     g, params, images, _ = setup
