@@ -28,6 +28,7 @@ from . import (
     table3_prediction_error,
     table4_throughput,
     table56_configs,
+    tail_latency,
     tpu_pipeit_bench,
 )
 
@@ -49,6 +50,7 @@ MODULES = [
     multimodel_serving,
     adaptive_replan,
     power_aware,
+    tail_latency,
     kernels_bench,
     tpu_pipeit_bench,
     roofline_report,

@@ -43,6 +43,7 @@ from .pipeline import (
     stage_time,
 )
 from .platform import HeteroPlatform, StageConfig
+from .queueing import LatencyPrediction, md1_wait_quantile, predict_latency
 
 
 def find_split(
@@ -228,6 +229,8 @@ def pipe_it_search(
     *,
     power_cap_w: Optional[float] = None,
     objective: str = "throughput",
+    slo_p99_ms: Optional[float] = None,
+    arrival_rate: Optional[float] = None,
 ) -> PipelinePlan:
     """The Pipe-it DSE entry point (paper §VI).
 
@@ -240,11 +243,30 @@ def pipe_it_search(
     dimension and returns a :class:`PowerAwarePlan` (plan + per-stage OPP
     assignment) instead of a bare :class:`PipelinePlan` — see
     :func:`power_aware_search`.
+
+    With ``slo_p99_ms``/``arrival_rate`` set (an end-to-end p99 budget in
+    ms and the open-loop Poisson rate in img/s), candidates are ranked by
+    SLO feasibility BEFORE throughput — the serving regime, where the
+    throughput-optimal deep pipeline is often the tail-latency-worst plan
+    — and the result is a :class:`SloPlan` (see
+    :func:`latency_aware_search`).  Combined with the power arguments the
+    SLO becomes an extra feasibility constraint on the DVFS search (a
+    :class:`PowerAwarePlan` whose clocks never drop below what the tail
+    budget needs).
     """
+    if slo_p99_ms is not None and arrival_rate is None:
+        raise ValueError("slo_p99_ms requires arrival_rate")
     if power_cap_w is not None or objective != "throughput":
         return power_aware_search(
             n_layers, platform, T, mode=mode,
             power_cap_w=power_cap_w, objective=objective,
+            slo_p99_s=None if slo_p99_ms is None else slo_p99_ms / 1e3,
+            arrival_rate=arrival_rate,
+        )
+    if slo_p99_ms is not None:
+        return latency_aware_search(
+            n_layers, platform, T,
+            arrival_rate=arrival_rate, slo_p99_s=slo_p99_ms / 1e3, mode=mode,
         )
     if mode == "merge":
         return merge_stage(list(range(n_layers)), platform, T)
@@ -303,6 +325,13 @@ class PowerAwarePlan:
     objective_name: str = "throughput"
     power_cap_w: Optional[float] = None
     feasible: bool = True  # avg_power_w <= power_cap_w (True when uncapped)
+    # SLO dimension (None when the search was latency-blind): predicted
+    # end-to-end p99 at the assigned clocks under Poisson arrivals at
+    # ``arrival_rate`` (core.queueing), and the budget it was held to.
+    # ``feasible`` additionally requires p99_s <= slo_p99_s when set.
+    p99_s: Optional[float] = None
+    slo_p99_s: Optional[float] = None
+    arrival_rate: Optional[float] = None
 
     def notation(self) -> str:
         freqs = "/".join(
@@ -346,12 +375,25 @@ def evaluate_frequencies(
     power_cap_w: Optional[float] = None,
     objective: str = "throughput",
     min_throughput: Optional[float] = None,
+    slo_p99_s: Optional[float] = None,
+    arrival_rate: Optional[float] = None,
 ) -> PowerAwarePlan:
-    """Score one (plan, frequency assignment) point of the design space."""
+    """Score one (plan, frequency assignment) point of the design space.
+
+    With ``slo_p99_s``/``arrival_rate`` set, the M/D/1 tail model
+    (core.queueing) predicts end-to-end p99 at these clocks — base latency
+    (sum of scaled stage times) plus the bottleneck's p99 queue wait at
+    the offered rate — and folds it into ``feasible``.  This is what
+    makes SLO-aware DVFS "never down-clock into an SLO violation": a
+    slower OPP that still meets the cap but pushes predicted p99 past the
+    budget is simply infeasible.
+    """
     if objective not in POWER_OBJECTIVES:
         raise ValueError(
             f"unknown objective {objective!r}; one of {POWER_OBJECTIVES}"
         )
+    if (slo_p99_s is None) != (arrival_rate is None):
+        raise ValueError("slo_p99_s and arrival_rate must be set together")
     times = stage_times_at(plan, T, platform, stage_freqs)
     cycle = max(max(times), 1e-12)
     energy = sum(
@@ -374,9 +416,16 @@ def evaluate_frequencies(
         score = -energy if energy > 0.0 else tp * 1e-15
     else:
         score = tp
+    p99 = None
+    if slo_p99_s is not None:
+        # Friedman reduction (core.queueing): e2e p99 = sum of stage
+        # times + the bottleneck's M/D/1 p99 wait (inf when rate >= 1/cycle).
+        p99 = sum(times) + md1_wait_quantile(0.99, arrival_rate, cycle)
     feasible = (
-        power_cap_w is None or avg_power <= power_cap_w * (1 + 1e-9)
-    ) and (min_throughput is None or tp >= min_throughput * (1 - 1e-9))
+        (power_cap_w is None or avg_power <= power_cap_w * (1 + 1e-9))
+        and (min_throughput is None or tp >= min_throughput * (1 - 1e-9))
+        and (p99 is None or p99 <= slo_p99_s * (1 + 1e-9))
+    )
     return PowerAwarePlan(
         plan=plan,
         stage_freqs=tuple(stage_freqs),
@@ -387,6 +436,9 @@ def evaluate_frequencies(
         objective_name=objective,
         power_cap_w=power_cap_w,
         feasible=feasible,
+        p99_s=p99,
+        slo_p99_s=slo_p99_s,
+        arrival_rate=arrival_rate,
     )
 
 
@@ -430,6 +482,8 @@ def assign_frequencies(
     power_cap_w: Optional[float] = None,
     objective: str = "throughput",
     min_throughput: Optional[float] = None,
+    slo_p99_s: Optional[float] = None,
+    arrival_rate: Optional[float] = None,
 ) -> PowerAwarePlan:
     """Optimal per-stage OPP assignment for a fixed (pipeline, allocation).
 
@@ -455,6 +509,7 @@ def assign_frequencies(
         evaluate_frequencies(
             plan, T, platform, max_freqs(plan, platform),
             power_cap_w, objective, min_throughput,
+            slo_p99_s, arrival_rate,
         )  # race-to-idle
     ]
     miss = object()  # distinct from None: a fixed-clock stage's OPP IS None
@@ -473,6 +528,7 @@ def assign_frequencies(
             evaluate_frequencies(
                 plan, T, platform, tuple(freqs),
                 power_cap_w, objective, min_throughput,
+                slo_p99_s, arrival_rate,
             )
         )
     return max(
@@ -488,6 +544,8 @@ def exhaustive_frequency_assignment(
     power_cap_w: Optional[float] = None,
     objective: str = "throughput",
     min_throughput: Optional[float] = None,
+    slo_p99_s: Optional[float] = None,
+    arrival_rate: Optional[float] = None,
 ) -> PowerAwarePlan:
     """Oracle: every per-stage OPP combination (|OPP|^p — small instances
     only); tests bound :func:`assign_frequencies` against it."""
@@ -497,7 +555,8 @@ def exhaustive_frequency_assignment(
     best: Optional[PowerAwarePlan] = None
     for combo in itertools.product(*per_stage):
         cand = evaluate_frequencies(
-            plan, T, platform, combo, power_cap_w, objective, min_throughput
+            plan, T, platform, combo, power_cap_w, objective, min_throughput,
+            slo_p99_s, arrival_rate,
         )
         if best is None or _power_rank_key(
             cand, power_cap_w, min_throughput
@@ -539,6 +598,8 @@ def power_aware_search(
     power_cap_w: Optional[float] = None,
     objective: str = "throughput",
     min_throughput: Optional[float] = None,
+    slo_p99_s: Optional[float] = None,
+    arrival_rate: Optional[float] = None,
 ) -> PowerAwarePlan:
     """The DVFS-extended DSE entry point: (pipeline x allocation x per-stage
     OPP) ranked by ``objective`` under an average-power cap.
@@ -555,11 +616,117 @@ def power_aware_search(
     best: Optional[PowerAwarePlan] = None
     for pl in _candidate_plans(n_layers, platform, T, mode):
         cand = assign_frequencies(
-            pl, T, platform, power_cap_w, objective, min_throughput
+            pl, T, platform, power_cap_w, objective, min_throughput,
+            slo_p99_s, arrival_rate,
         )
         if best is None or _power_rank_key(
             cand, power_cap_w, min_throughput
         ) > _power_rank_key(best, power_cap_w, min_throughput):
+            best = cand
+    assert best is not None
+    return best
+
+
+# ---------------------------------------------------------------------------
+# SLO-aware planning: rank by tail-latency feasibility before throughput
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SloPlan:
+    """A plan ranked under an end-to-end p99 SLO at an offered rate.
+
+    ``feasible`` means the queueing model predicts p99 within
+    ``headroom * slo_p99_s`` — the margin absorbs model error (the M/D/1
+    reduction over-/under-shoots the simulator by up to ~15% near high
+    utilization; tests/test_queueing.py pins the band) so a plan the
+    search calls feasible is not shown violating the SLO by the
+    simulator.
+    """
+
+    plan: PipelinePlan
+    prediction: LatencyPrediction
+    throughput: float  # Eq. 12 saturation capacity (img/s)
+    arrival_rate: float
+    slo_p99_s: float
+    headroom: float
+    feasible: bool
+
+    def notation(self) -> str:
+        p99 = (
+            "inf" if not self.prediction.stable
+            else f"{self.prediction.p99_s * 1e3:.1f}ms"
+        )
+        verdict = "<=" if self.feasible else ">"
+        return (
+            f"{self.plan.notation()}  @ p99~{p99} "
+            f"{verdict} {self.slo_p99_s * 1e3:.1f}ms SLO"
+        )
+
+
+def _slo_rank_key(s: SloPlan):
+    """Feasibility floor first (the ``partition_search`` lexicographic
+    idiom): among feasible plans, most throughput, then lowest p99; among
+    stable-but-over-budget plans, closest to the budget; unstable plans
+    last, least-overloaded first."""
+    if s.feasible:
+        return (2, s.throughput, -s.prediction.p99_s)
+    if s.prediction.stable:
+        return (1, -s.prediction.p99_s, s.throughput)
+    return (0, -s.prediction.utilization, s.throughput)
+
+
+def latency_aware_search(
+    n_layers: int,
+    platform: HeteroPlatform,
+    T: TimeMatrix,
+    *,
+    arrival_rate: float,
+    slo_p99_s: float,
+    mode: str = "best",
+    headroom: float = 0.9,
+    boundary_bytes: Optional[Sequence[int]] = None,
+) -> SloPlan:
+    """SLO-first DSE over the same candidate plans the throughput search
+    considers, plus every single-stage vocabulary config (the low-latency
+    end of the space a saturation search never visits).
+
+    The throughput-optimal deep pipeline maximises Eq. 12 but pays its
+    depth in base latency (every stage time + boundary hop is on the
+    critical path of EVERY image); under an open-loop rate with a p99
+    budget, a shallower plan with a little less capacity is often the
+    only feasible choice.  Candidates are ranked feasibility-first (see
+    :func:`_slo_rank_key`); if nothing fits the budget the best-effort
+    plan is returned with ``feasible=False`` — the caller decides whether
+    to shed load or relax the SLO.
+    """
+    if arrival_rate <= 0.0:
+        raise ValueError(f"arrival_rate {arrival_rate} <= 0")
+    if slo_p99_s <= 0.0:
+        raise ValueError(f"slo_p99_s {slo_p99_s} <= 0")
+    if not 0.0 < headroom <= 1.0:
+        raise ValueError(f"headroom {headroom} outside (0, 1]")
+    plans = _candidate_plans(n_layers, platform, T, mode)
+    all_layers = tuple(range(n_layers))
+    seen = {(pl.pipeline.stages, pl.allocation) for pl in plans}
+    for stage in platform.stage_vocabulary():  # p = 1 candidates
+        pl = _plan(Pipeline(stages=(stage,)), (all_layers,))
+        if (pl.pipeline.stages, pl.allocation) not in seen:
+            plans.append(pl)
+    best: Optional[SloPlan] = None
+    for pl in plans:
+        pred = predict_latency(
+            pl, T, platform, arrival_rate, boundary_bytes=boundary_bytes
+        )
+        cand = SloPlan(
+            plan=pl,
+            prediction=pred,
+            throughput=pl.throughput(T),
+            arrival_rate=arrival_rate,
+            slo_p99_s=slo_p99_s,
+            headroom=headroom,
+            feasible=pred.stable and pred.p99_s <= headroom * slo_p99_s,
+        )
+        if best is None or _slo_rank_key(cand) > _slo_rank_key(best):
             best = cand
     assert best is not None
     return best

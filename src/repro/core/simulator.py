@@ -14,10 +14,11 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence
 
 from .pipeline import PipelinePlan, TimeMatrix
 from .platform import HeteroPlatform
+from .queueing import empirical_percentile
 
 
 class SimulatedClock:
@@ -63,6 +64,18 @@ class SimResult:
     # the throughput/watt objective are stated in.
     energy_j: float = 0.0
     avg_power_w: float = 0.0
+    # Open-loop accounting (present for closed-loop runs too: with all
+    # arrivals at t=0 the "latency" of image z includes waiting behind its
+    # z-1 predecessors, i.e. the saturation sojourn time).
+    latencies_s: List[float] = dataclasses.field(default_factory=list)
+    latency_p50_s: float = 0.0
+    latency_p95_s: float = 0.0
+    latency_p99_s: float = 0.0
+    shed: int = 0  # arrivals rejected by the admission callback
+    # stage_free at the end of the run: the queue state to carry into the
+    # next simulation window (``simulate(initial_free=...)``) so windowed
+    # control loops see backlogs survive across control decisions.
+    stage_free_s: List[float] = dataclasses.field(default_factory=list)
 
 
 def simulate(
@@ -72,6 +85,9 @@ def simulate(
     n_images: int = 50,
     boundary_bytes: Optional[Sequence[int]] = None,
     stage_freqs: Optional[Sequence[Optional[float]]] = None,
+    arrival_s: Optional[Sequence[float]] = None,
+    initial_free: Optional[Sequence[float]] = None,
+    admit: Optional[Callable[[float, float], bool]] = None,
 ) -> SimResult:
     """Simulate ``n_images`` flowing through the pipeline.
 
@@ -83,6 +99,19 @@ def simulate(
     and each stage's busy time is charged the cluster's active power at
     that OPP, filling ``SimResult.energy_j``/``avg_power_w`` — the
     simulator-side ground truth the power-aware DSE is validated against.
+
+    ``arrival_s`` switches the run open-loop: an ascending sequence of
+    absolute arrival times (e.g. ``serving.loadgen.poisson_trace().times``)
+    replaces the closed-loop "enter as soon as stage 0 frees up" rule, and
+    ``SimResult`` reports per-image latency (finish - arrival) percentiles
+    — the ground truth ``core.queueing.predict_latency`` is validated
+    against.  ``n_images`` is ignored when a trace is given.
+
+    ``initial_free`` seeds per-stage busy-until times (from a previous
+    window's ``stage_free_s``) so windowed control loops carry queue state.
+    ``admit(arrival_time, predicted_wait_s)`` is consulted per arrival;
+    returning False sheds the image (counted in ``SimResult.shed``) —
+    the hook the queue-aware admission controller plugs into.
     """
     p = plan.pipeline.p
     service = plan.stage_times(T)
@@ -108,14 +137,35 @@ def simulate(
         # Same-cluster handoff stays in the shared L2: no CCI crossing.
         transfer.append(platform.transfer_time(nbytes) if ta != tb and nbytes else 0.0)
 
-    # done[i] = time stage i finishes its current image
-    stage_free = [0.0] * p
-    arrive = [0.0] * p  # arrival time of the current image at stage i
-    finish: List[float] = []
-    busy = [0.0] * p
+    if arrival_s is None:
+        # Closed loop: every image is already waiting at t=0; image z
+        # enters stage 0 the moment it frees up (start = max(0, free)).
+        arrivals: Sequence[float] = [0.0] * n_images
+    else:
+        arrivals = list(arrival_s)
+        for a, b in zip(arrivals, arrivals[1:]):
+            if b < a:
+                raise ValueError("arrival_s must be ascending")
+        if arrivals and arrivals[0] < 0.0:
+            raise ValueError("arrival times must be >= 0")
 
-    for _ in range(n_images):
-        t = 0.0  # image enters stage 0 as soon as the stage frees up
+    # stage_free[i] = time stage i finishes its current image
+    if initial_free is not None:
+        if len(initial_free) != p:
+            raise ValueError(f"{len(initial_free)} initial_free for {p} stages")
+        stage_free = [float(x) for x in initial_free]
+    else:
+        stage_free = [0.0] * p
+    finish: List[float] = []
+    latencies: List[float] = []
+    busy = [0.0] * p
+    shed = 0
+
+    for a in arrivals:
+        if admit is not None and not admit(a, max(stage_free[0] - a, 0.0)):
+            shed += 1
+            continue
+        t = a
         for i in range(p):
             start = max(t, stage_free[i])
             end = start + service[i]
@@ -123,20 +173,28 @@ def simulate(
             stage_free[i] = end
             t = end + (transfer[i] if i < p - 1 else 0.0)
         finish.append(t)
+        latencies.append(t - a)
 
-    makespan = finish[-1]
-    half = max(1, n_images // 2)
-    if n_images > half:
-        steady = (n_images - half) / max(finish[-1] - finish[half - 1], 1e-12)
+    n_done = len(finish)
+    makespan = finish[-1] if finish else 0.0
+    half = max(1, n_done // 2)
+    if n_done > half:
+        steady = (n_done - half) / max(finish[-1] - finish[half - 1], 1e-12)
     else:
-        steady = n_images / max(makespan, 1e-12)
+        steady = n_done / max(makespan, 1e-12)
     energy = sum(pw * b for pw, b in zip(stage_power, busy))
     return SimResult(
         makespan_s=makespan,
         steady_throughput=steady,
-        overall_throughput=n_images / max(makespan, 1e-12),
+        overall_throughput=n_done / max(makespan, 1e-12),
         stage_busy_s=busy,
         finish_times=finish,
         energy_j=energy,
         avg_power_w=energy / max(makespan, 1e-12),
+        latencies_s=latencies,
+        latency_p50_s=empirical_percentile(latencies, 50.0),
+        latency_p95_s=empirical_percentile(latencies, 95.0),
+        latency_p99_s=empirical_percentile(latencies, 99.0),
+        shed=shed,
+        stage_free_s=list(stage_free),
     )

@@ -18,6 +18,13 @@ paper's equations):
   power-aware DSE's per-stage OPP assignment, normalizes observations
   back to f_max, and re-plans on throttle events
   (``serve(power_cap_w=...)``).
+* :mod:`.loadgen`  — open-loop load: seedable arrival-trace generators
+  (Poisson / MMPP burst / diurnal / JSON replay) + ``run_open_loop``,
+  which paces a trace into a live server; the same trace drives
+  ``core.simulator.simulate(arrival_s=...)`` for ground truth.  The
+  queue-aware runtime half (admission shedding, flush/batch adaptation,
+  windowed SLO-DVFS) lives in :mod:`.adaptive` (``QueueController``,
+  ``OpenLoopServing``) and :mod:`.governor` (``run_slo_governed_loop``).
 * :mod:`.registry` / :mod:`.multimodel` — multi-model co-serving:
   ``ModelRegistry`` + ``MultiModelServer`` run one pipeline worker set
   per co-resident CNN on its cluster share (two-level partition DSE,
@@ -32,6 +39,9 @@ from .adaptive import (
     DriftDetector,
     DriftingMatrix,
     OnlineCalibrator,
+    OpenLoopServing,
+    QueueController,
+    QueuePolicy,
     ReplanEvent,
     ServerSampler,
     SimulatedServing,
@@ -52,6 +62,15 @@ from .governor import (
     attach_governor,
     governed_stage_fn_builder,
     run_governed_loop,
+    run_slo_governed_loop,
+)
+from .loadgen import (
+    ArrivalTrace,
+    OpenLoopReport,
+    diurnal_trace,
+    mmpp_trace,
+    poisson_trace,
+    run_open_loop,
 )
 from .metrics import RouterMetrics, ServerMetrics, StageMetrics, percentile
 from .multimodel import (
@@ -85,6 +104,16 @@ __all__ = [
     "attach_governor",
     "governed_stage_fn_builder",
     "run_governed_loop",
+    "run_slo_governed_loop",
+    "ArrivalTrace",
+    "OpenLoopReport",
+    "OpenLoopServing",
+    "QueueController",
+    "QueuePolicy",
+    "diurnal_trace",
+    "mmpp_trace",
+    "poisson_trace",
+    "run_open_loop",
     "ModelEntry",
     "ModelRegistry",
     "MultiModelMonitor",

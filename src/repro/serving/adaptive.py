@@ -30,11 +30,27 @@ them back:
   ``server.swap_plan`` (the drain-and-switch epoch protocol — no
   in-flight ticket is ever dropped).
 
+Under an open-loop arrival process (serving/loadgen.py) the queue, not
+the pipeline, owns the tail — so the control plane also grows
+queue-state-aware actuators:
+
+* :class:`QueueController` — per-request admission shedding (refuse
+  work whose predicted completion already busts the p99 budget) and
+  load-adaptive micro-batching (flush timeout sized to the SLO slack,
+  batch size to the estimated utilization), driven by the same M/D/1
+  arithmetic the SLO planner used (core/queueing.py).
+* ``AdaptiveController(slo_p99_s=..., arrival_rate=...)`` — threads the
+  p99 budget through every frequency decision (initial assignment,
+  ``set_load`` retunes, cap re-plans), so SLO-aware DVFS never
+  down-clocks into a predicted violation.
+
 Determinism for tests: :class:`SimulatedServing` runs the same control
 loop against the discrete-event simulator (core/simulator.py) on a
 :class:`~repro.core.simulator.SimulatedClock` — observed stage times
 come from a ground-truth matrix that tests drift at will, so every
 calibrate/detect/re-plan trajectory is exactly reproducible.
+:class:`OpenLoopServing` is its open-loop sibling: trace windows through
+the simulator with queue-state carry between control decisions.
 :func:`delayed_stage_fn_builder` is the live-server analogue (fake-stage
 mode): real outputs, scripted service delays.
 """
@@ -207,6 +223,9 @@ class AdaptiveController:
         power_cap_w: Optional[float] = None,
         objective: str = "throughput",
         min_throughput: Optional[float] = None,
+        slo_p99_s: Optional[float] = None,
+        arrival_rate: Optional[float] = None,
+        slo_headroom: float = 0.85,
     ):
         self.config = config or AdaptiveConfig()
         self.calibrator = OnlineCalibrator(prior, alpha=self.config.alpha)
@@ -223,11 +242,23 @@ class AdaptiveController:
         self.power_cap_w = power_cap_w
         self.objective = objective
         self.min_throughput = min_throughput
+        # SLO dimension (ROADMAP item 4): an end-to-end p99 budget at the
+        # currently-believed open-loop arrival rate.  The budget handed to
+        # the DSE is ``slo_headroom * slo_p99_s`` — the margin absorbs
+        # queueing-model error so "feasible" clocks are not shown
+        # violating the SLO by the simulator (tests pin this).
+        if slo_p99_s is not None and arrival_rate is None:
+            raise ValueError("slo_p99_s requires arrival_rate")
+        if not 0.0 < slo_headroom <= 1.0:
+            raise ValueError(f"slo_headroom {slo_headroom} outside (0, 1]")
+        self.slo_p99_s = slo_p99_s
+        self.arrival_rate = arrival_rate
+        self.slo_headroom = slo_headroom
         self.power_plan: Optional[PowerAwarePlan] = None
         if self.power_aware:
             self.power_plan = assign_frequencies(
                 plan, self.T_planned, platform, power_cap_w, objective,
-                min_throughput,
+                min_throughput, self._slo_budget(), self._slo_rate(),
             )
         self.rounds = 0
         self.swaps = 0
@@ -241,7 +272,36 @@ class AdaptiveController:
             self.power_cap_w is not None
             or self.objective != "throughput"
             or self.min_throughput is not None
+            or self.slo_p99_s is not None
         )
+
+    def _slo_budget(self) -> Optional[float]:
+        """The margined p99 budget the DSE is held to (None = no SLO)."""
+        if self.slo_p99_s is None:
+            return None
+        return self.slo_p99_s * self.slo_headroom
+
+    def _slo_rate(self) -> Optional[float]:
+        return None if self.slo_p99_s is None else self.arrival_rate
+
+    def set_load(self, arrival_rate: float) -> PowerAwarePlan:
+        """The measured open-loop rate moved: re-slack-match the current
+        plan's clocks so the SLO stays feasible at the NEW rate (e.g. an
+        MMPP burst needs the clocks an energy objective would otherwise
+        down-shift).  Frequency-only — no pipeline drain, no min-gain
+        gate; the governor applies the returned assignment live."""
+        if arrival_rate <= 0.0:
+            raise ValueError(f"arrival_rate {arrival_rate} <= 0")
+        if self.slo_p99_s is None:
+            raise ValueError("set_load needs an SLO-aware controller")
+        self.arrival_rate = arrival_rate
+        pplan = assign_frequencies(
+            self.plan, self.T_planned, self.platform, self.power_cap_w,
+            self.objective, self.min_throughput,
+            self._slo_budget(), self._slo_rate(),
+        )
+        self.power_plan = pplan
+        return pplan
 
     def replan_under_cap(
         self, power_cap_w: Optional[float]
@@ -261,6 +321,7 @@ class AdaptiveController:
             self.calibrator.n_layers, self.platform, T_new, mode=self.mode,
             power_cap_w=power_cap_w, objective=self.objective,
             min_throughput=self.min_throughput,
+            slo_p99_s=self._slo_budget(), arrival_rate=self._slo_rate(),
         )
         self.detector.reset()
         swapped = candidate.plan != self.plan
@@ -347,11 +408,13 @@ class AdaptiveController:
         keep = assign_frequencies(
             self.plan, T_new, self.platform, self.power_cap_w,
             self.objective, self.min_throughput,
+            self._slo_budget(), self._slo_rate(),
         )
         candidate = power_aware_search(
             self.calibrator.n_layers, self.platform, T_new, mode=self.mode,
             power_cap_w=self.power_cap_w, objective=self.objective,
             min_throughput=self.min_throughput,
+            slo_p99_s=self._slo_budget(), arrival_rate=self._slo_rate(),
         )
         if keep.objective > 0.0:
             gain = candidate.objective / max(keep.objective, 1e-12)
@@ -693,6 +756,192 @@ def run_adaptive_loop(
         if new_plan is not None and on_swap is not None:
             on_swap(r, new_plan)
     return trajectory
+
+
+class OpenLoopServing:
+    """Trace-driven open-loop counterpart of :class:`SimulatedServing`.
+
+    Windows of an arrival trace (absolute times) run through the
+    discrete-event simulator with per-stage queue state carried across
+    windows (``SimResult.stage_free_s`` → ``simulate(initial_free=...)``),
+    so a backlog built during a burst is still there when the next
+    control decision runs — the property that makes windowed SLO control
+    testable.  Because both arrivals and the carry are absolute times,
+    windowing is exact: simulating a trace window-by-window under an
+    unchanged plan is bit-identical to simulating it in one call
+    (tests/test_queueing.py pins this).
+
+    A plan change between windows follows drain-and-switch semantics: the
+    new pipeline's stages start free at the OLD pipeline's drain time —
+    in-flight work finishes first, nothing is dropped — matching the live
+    server's epoch protocol.
+    """
+
+    def __init__(
+        self,
+        truth: TimeMatrix,
+        platform: HeteroPlatform,
+        clock: Optional[SimulatedClock] = None,
+    ):
+        self.truth = DriftingMatrix(truth)
+        self.platform = platform
+        self.clock = clock if clock is not None else SimulatedClock()
+        self._free: Optional[List[float]] = None
+        self._shape = None
+        self.last_result = None
+
+    def inject_drift(self, core_type: str, factor: float) -> None:
+        self.truth.scale(core_type, factor)
+
+    def window(
+        self,
+        plan: PipelinePlan,
+        arrivals: Sequence[float],
+        *,
+        window_s: float,
+        stage_freqs: Optional[Sequence[Optional[float]]] = None,
+        admit=None,
+    ):
+        """Run one control window of absolute ``arrivals`` under ``plan``
+        (at ``stage_freqs`` clocks), carrying queue state; advances the
+        clock by ``window_s``.  Returns the window's ``SimResult``."""
+        shape = (plan.pipeline.stages, plan.allocation)
+        if self._free is None or shape != self._shape:
+            drain = max(self._free) if self._free else 0.0
+            self._free = [drain] * plan.pipeline.p
+            self._shape = shape
+        result = simulate(
+            plan, self.truth.T, self.platform,
+            arrival_s=list(arrivals), stage_freqs=stage_freqs,
+            initial_free=self._free, admit=admit,
+        )
+        self._free = list(result.stage_free_s)
+        self.clock.advance(window_s)
+        self.last_result = result
+        return result
+
+
+@dataclasses.dataclass
+class QueuePolicy:
+    """Knobs of the queue-aware admission/batching controller."""
+
+    slo_p99_s: float  # end-to-end tail budget the controller defends
+    shed_headroom: float = 1.0  # admit while predicted e2e <= headroom*slo
+    min_flush_s: float = 0.0
+    max_flush_s: float = 0.05
+    flush_fraction: float = 0.1  # fraction of the SLO slack spent batching
+    rate_alpha: float = 0.3  # EWMA weight of the arrival-rate estimate
+
+
+class QueueController:
+    """Queue-state-aware admission shedding + batching adaptation.
+
+    The runtime closure of the queueing model: where the DSE uses
+    ``predict_latency`` to CHOOSE a plan, this controller uses the same
+    arithmetic per request to protect the chosen plan's SLO —
+
+    * **Admission** (:meth:`should_admit`): a request whose predicted
+      completion (queue wait + base pipeline latency) already exceeds the
+      budget is refused at the door.  Serving it would waste bottleneck
+      time on a guaranteed SLO miss AND push every queued request further
+      past the budget — shedding one doomed request protects many.
+    * **Flush timeout** (:meth:`flush_timeout`): the size-or-deadline
+      batching deadline is paid by every request on the latency path, so
+      it is sized to a fraction of the SLO slack; under overload
+      (estimated rho >= 1) it opens to the maximum — batching throughput
+      is all that drains the queue.
+    * **Batch size** (:meth:`recommended_batch`): grows when estimated
+      utilization runs hot, shrinks when the line is idle.
+
+    ``service_s`` is the per-image bottleneck service time and
+    ``base_latency_s`` the zero-queue pipeline latency of the ACTIVE plan
+    (update via :meth:`update_plan` after a hot-swap).  The live driver
+    (``serving.loadgen.run_open_loop``) calls ``observe_arrival`` /
+    ``should_admit`` per request; the simulator path plugs
+    ``should_admit`` straight into ``simulate(admit=...)`` — one policy,
+    both execution paths.
+    """
+
+    def __init__(
+        self,
+        policy: QueuePolicy,
+        base_latency_s: float,
+        service_s: float,
+    ):
+        if service_s <= 0.0:
+            raise ValueError(f"service_s {service_s} <= 0")
+        self.policy = policy
+        self.base_latency_s = base_latency_s
+        self.service_s = service_s
+        self.rate_hat = 0.0
+        self._last_arrival: Optional[float] = None
+        self.admitted = 0
+        self.shed = 0
+
+    def update_plan(self, base_latency_s: float, service_s: float) -> None:
+        """Re-point the controller at a new plan's latency geometry."""
+        if service_s <= 0.0:
+            raise ValueError(f"service_s {service_s} <= 0")
+        self.base_latency_s = base_latency_s
+        self.service_s = service_s
+
+    @property
+    def utilization(self) -> float:
+        return self.rate_hat * self.service_s
+
+    def observe_arrival(self, now_s: float) -> None:
+        """EWMA the arrival rate from inter-arrival gaps."""
+        if self._last_arrival is not None:
+            gap = now_s - self._last_arrival
+            if gap > 0.0:
+                a = self.policy.rate_alpha
+                self.rate_hat = (1 - a) * self.rate_hat + a / gap
+        self._last_arrival = now_s
+
+    def should_admit(self, queue_wait_s: float, _arrival_s: float = 0.0) -> bool:
+        """Admit iff predicted completion fits the (headroomed) budget.
+
+        Signature doubles as ``simulate(admit=...)``'s
+        ``(arrival, predicted_wait)`` callback — the simulator passes
+        (arrival, wait) positionally, the live driver passes wait alone —
+        so both paths shed by the identical rule."""
+        wait = max(queue_wait_s, _arrival_s) if _arrival_s else queue_wait_s
+        ok = (
+            wait + self.base_latency_s
+            <= self.policy.shed_headroom * self.policy.slo_p99_s
+        )
+        if ok:
+            self.admitted += 1
+        else:
+            self.shed += 1
+        return ok
+
+    def admit_callback(self):
+        """The ``simulate(admit=...)`` adapter: (arrival, wait) -> bool."""
+
+        def admit(_arrival_s: float, predicted_wait_s: float) -> bool:
+            return self.should_admit(predicted_wait_s)
+
+        return admit
+
+    def flush_timeout(self) -> float:
+        """Deadline for the size-or-deadline micro-batch trigger."""
+        p = self.policy
+        if self.utilization >= 1.0:
+            return p.max_flush_s
+        slack = max(0.0, p.shed_headroom * p.slo_p99_s - self.base_latency_s)
+        return min(p.max_flush_s, max(p.min_flush_s, p.flush_fraction * slack))
+
+    def recommended_batch(self, current: int, max_batch: int = 8) -> int:
+        """Batch-size recommendation from estimated utilization: hot lines
+        amortize overhead across more images, idle lines stop paying
+        padding FLOPs.  The caller applies it via
+        ``PipelineServer.set_batching`` (one compile blip per new shape)."""
+        if self.utilization > 0.75:
+            return min(max(current * 2, 1), max_batch)
+        if self.utilization < 0.25:
+            return max(current // 2, 1)
+        return current
 
 
 def delayed_stage_fn_builder(

@@ -59,6 +59,7 @@ __all__ = [
     "attach_governor",
     "governed_stage_fn_builder",
     "run_governed_loop",
+    "run_slo_governed_loop",
 ]
 
 
@@ -154,6 +155,23 @@ class DvfsGovernor:
                 else o
             )
         return out
+
+    # ---------------------------------------------------------- SLO load
+    def set_load(self, arrival_rate: float) -> PowerAwarePlan:
+        """The arrival rate moved: retune clocks so the p99 SLO still
+        holds at the new load, and apply them.
+
+        Frequency-only (no drain, no swap): the layer allocation stays;
+        ``AdaptiveController.set_load`` re-runs the slack-matched
+        frequency assignment with the M/D/1 p99 (base latency + waiting
+        quantile at ``arrival_rate``) folded into feasibility — so a calm
+        phase may down-clock for energy, but a burst *forces* the clocks
+        back up before the queue can build.  This is the 'never
+        down-clock into an SLO violation' contract: feasibility at the
+        CURRENT rate is checked before energy is optimized."""
+        pplan = self.controller.set_load(arrival_rate)
+        self.apply(pplan)
+        return pplan
 
     # ---------------------------------------------------------- throttle
     def throttle(self, power_cap_w: Optional[float]) -> PowerAwarePlan:
@@ -279,6 +297,65 @@ def run_governed_loop(
     return trajectory
 
 
+def run_slo_governed_loop(
+    governor: DvfsGovernor,
+    env,
+    trace,
+    window_s: float,
+    admission=None,
+) -> List[Dict[str, Any]]:
+    """Windowed SLO-aware DVFS against an open-loop arrival trace.
+
+    Drives an :class:`~repro.serving.adaptive.OpenLoopServing` board
+    through ``trace`` in ``window_s`` chunks.  Each window: measure the
+    window's offered rate, retune clocks for it (:meth:`DvfsGovernor.
+    set_load` — SLO feasibility before energy), then run the window's
+    arrivals through the simulator at those clocks, carrying queue state
+    into the next window.  ``admission`` (a ``serving.adaptive.
+    QueueController``) optionally sheds at the door via
+    ``simulate(admit=...)``.
+
+    The rate fed to ``set_load`` is the *current* window's — a same-
+    window oracle rather than a trailing estimate.  That is deliberate
+    for the deterministic harness (tests compare SLO-aware vs
+    unconstrained clocking under identical information); a live governor
+    gets the previous window's EWMA instead and covers the lag with
+    ``slo_headroom``.  Returns one record per window:
+    ``{t0_s, rate, n_arrivals, p99_s, power_w, freqs_ghz, shed, done}``.
+    """
+    ctrl = governor.controller
+    records: List[Dict[str, Any]] = []
+    n_windows = int(trace.duration_s / window_s) + 1
+    for w in range(n_windows):
+        start, end = w * window_s, (w + 1) * window_s
+        arrivals = trace.window(start, end)
+        if arrivals:
+            governor.set_load(len(arrivals) / window_s)
+        result = env.window(
+            ctrl.plan,
+            arrivals,
+            window_s=window_s,
+            stage_freqs=governor.stage_freqs,
+            admit=admission.admit_callback() if admission is not None else None,
+        )
+        records.append(
+            {
+                "t0_s": start,
+                "rate": len(arrivals) / window_s,
+                "n_arrivals": len(arrivals),
+                "p99_s": result.latency_p99_s,
+                "power_w": result.avg_power_w,
+                "freqs_ghz": [
+                    None if f is None else round(f / 1e9, 3)
+                    for f in governor.stage_freqs
+                ],
+                "shed": result.shed,
+                "done": len(result.finish_times),
+            }
+        )
+    return records
+
+
 def attach_governor(
     server: PipelineServer,
     prior: TimeMatrix,
@@ -287,6 +364,8 @@ def attach_governor(
     power_cap_w: Optional[float] = None,
     objective: str = "throughput",
     min_throughput: Optional[float] = None,
+    slo_p99_s: Optional[float] = None,
+    arrival_rate: Optional[float] = None,
     mode: str = "best",
     config: Optional[AdaptiveConfig] = None,
     physical_clocks: bool = False,
@@ -304,7 +383,12 @@ def attach_governor(
     path runs real full-speed stage functions — the plan's OPPs are
     planning bookkeeping, so observations must NOT be divided by the
     assigned frequency scale.  Pass True when the stage functions honor
-    the clocks (``governed_stage_fn_builder`` or real cpufreq)."""
+    the clocks (``governed_stage_fn_builder`` or real cpufreq).
+
+    ``slo_p99_s`` + ``arrival_rate`` make the loop SLO-aware: every
+    frequency decision (initial, drift retune, throttle re-plan,
+    ``set_load``) must keep predicted p99 = base latency + M/D/1 wait
+    under the budget before it may save energy."""
     controller = AdaptiveController(
         prior=prior,
         plan=server.plan,
@@ -314,6 +398,8 @@ def attach_governor(
         power_cap_w=power_cap_w,
         objective=objective,
         min_throughput=min_throughput,
+        slo_p99_s=slo_p99_s,
+        arrival_rate=arrival_rate,
     )
     governor = DvfsGovernor(
         platform, controller, server=server, physical_clocks=physical_clocks

@@ -122,9 +122,17 @@ class StageMetrics:
 class ServerMetrics:
     """Aggregates stage metrics plus end-to-end request accounting.
 
-    The end-to-end latency of image z includes queueing: in steady state it
-    approaches ``p * max_i T_{L_i}`` (fill latency, Eq. 11's pipeline-fill
-    term) while throughput approaches ``1 / max_i T_{L_i}`` (Eq. 12).
+    The end-to-end latency of image z includes queueing: the window is
+    stamped at ``submit()`` (the ``Ticket``'s enqueue timestamp), so the
+    reported percentiles cover ingress-queue wait + pipeline time — under
+    an open-loop arrival process the queue wait IS the tail (ROADMAP item
+    4), so a service-time-only e2e would under-report p99.  In steady
+    state closed-loop it approaches ``p * max_i T_{L_i}`` (fill latency,
+    Eq. 11's pipeline-fill term) while throughput approaches
+    ``1 / max_i T_{L_i}`` (Eq. 12).  ``note_dequeue`` additionally breaks
+    out the queue-wait component (submit → the stage-0 worker forming the
+    micro-batch) so an operator can tell a saturated ingress from a slow
+    pipeline at a glance.
     """
 
     def __init__(self, stage_names: List[str]):
@@ -135,6 +143,7 @@ class ServerMetrics:
         )
         self._lock = threading.Lock()
         self._e2e_s: Deque[float] = collections.deque(maxlen=E2E_WINDOW)
+        self._queue_wait_s: Deque[float] = collections.deque(maxlen=E2E_WINDOW)
         self._completed = 0
         self._first_submit: Optional[float] = None
         self._last_complete: Optional[float] = None
@@ -158,6 +167,11 @@ class ServerMetrics:
             if self._first_submit is None:
                 self._first_submit = now
 
+    def note_dequeue(self, submitted_at: float, now: float) -> None:
+        """Record one image's ingress-queue wait (submit → batch formed)."""
+        with self._lock:
+            self._queue_wait_s.append(now - submitted_at)
+
     def note_complete(self, submitted_at: float, now: float) -> None:
         with self._lock:
             self._e2e_s.append(now - submitted_at)
@@ -180,6 +194,7 @@ class ServerMetrics:
     def snapshot(self) -> Dict[str, Any]:
         with self._lock:
             e2e = list(self._e2e_s)
+            qwait = list(self._queue_wait_s)
             completed = self._completed
         return {
             "completed": completed,
@@ -188,6 +203,9 @@ class ServerMetrics:
             "e2e_p50_s": percentile(e2e, 50),
             "e2e_p95_s": percentile(e2e, 95),
             "e2e_p99_s": percentile(e2e, 99),
+            "queue_wait_p50_s": percentile(qwait, 50),
+            "queue_wait_p95_s": percentile(qwait, 95),
+            "queue_wait_p99_s": percentile(qwait, 99),
             "stages": [s.snapshot() for s in self.stages],
         }
 

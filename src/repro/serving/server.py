@@ -67,11 +67,17 @@ class ServerClosed(ServingError):
 
 
 class Ticket:
-    """A pending result for one submitted image (a minimal future)."""
+    """A pending result for one submitted image (a minimal future).
+
+    ``submitted_at`` is the enqueue timestamp (stamped inside ``submit()``)
+    and ``dequeued_at`` is set by the stage-0 worker when the image's
+    micro-batch forms — their difference is the ingress-queue wait, the
+    component that dominates tail latency under open-loop load.
+    """
 
     __slots__ = (
-        "id", "submitted_at", "_event", "_value", "_error", "_callbacks",
-        "_cb_lock",
+        "id", "submitted_at", "dequeued_at", "_event", "_value", "_error",
+        "_callbacks", "_cb_lock",
     )
 
     _ids = itertools.count()  # monotone ids for log/trace context
@@ -79,6 +85,7 @@ class Ticket:
     def __init__(self, submitted_at: float):
         self.id = next(Ticket._ids)
         self.submitted_at = submitted_at
+        self.dequeued_at: Optional[float] = None
         self._event = threading.Event()
         self._value: Optional[jnp.ndarray] = None
         self._error: Optional[BaseException] = None
@@ -411,6 +418,36 @@ class PipelineServer:
         """Compile every stage at the padded micro-batch shape."""
         self._warm(self._stage_fns)
 
+    # ------------------------------------------------- live batching control
+    def ingress_depth(self) -> int:
+        """Images currently waiting in the ingress queue (approximate —
+        the stage-0 worker drains concurrently); the queue-state signal
+        the admission controller converts into a predicted wait."""
+        return self._ingress.qsize()
+
+    def set_batching(
+        self,
+        batch_size: Optional[int] = None,
+        flush_timeout_s: Optional[float] = None,
+    ) -> None:
+        """Adapt the batching policy live — the queue-aware controller's
+        knobs.  Both are read fresh by the stage-0 gather loop each
+        micro-batch, so no restart or epoch swap is needed: a smaller
+        flush timeout trades batching efficiency for latency when the
+        queue is shallow; a larger batch amortizes per-batch overhead
+        when utilization climbs.  A batch-size change re-traces the
+        jitted stage fns at the new padded shape on first use (one
+        compile blip, after which both shapes stay cached).
+        """
+        if batch_size is not None:
+            if batch_size < 1:
+                raise ValueError(f"batch_size {batch_size} < 1")
+            self.batch_size = int(batch_size)
+        if flush_timeout_s is not None:
+            if flush_timeout_s < 0.0:
+                raise ValueError(f"flush_timeout_s {flush_timeout_s} < 0")
+            self.flush_timeout_s = float(flush_timeout_s)
+
     # -------------------------------------------------------------- ingress
     def submit(
         self,
@@ -529,6 +566,9 @@ class PipelineServer:
                 if items:
                     t0 = time.perf_counter()
                     tickets = tuple(t for t, _ in items)
+                    for t in tickets:
+                        t.dequeued_at = t0
+                        self.metrics.note_dequeue(t.submitted_at, t0)
                     env = stack_envs(
                         [{"input": x} for _, x in items], pad_to=self.batch_size
                     )

@@ -27,6 +27,7 @@ from repro.core import (
     max_freqs,
     pipe_it_search,
     power_aware_search,
+    predict_latency,
     scale_core_type,
 )
 from repro.core.calibration import synthetic_model
@@ -40,8 +41,11 @@ from repro.serving import (
     DriftingMatrix,
     DvfsGovernor,
     OnlineCalibrator,
+    OpenLoopServing,
     PipelineServer,
     PipelinedGraphEngine,
+    QueueController,
+    QueuePolicy,
     ServerClosed,
     ServingError,
     SimulatedServing,
@@ -49,8 +53,10 @@ from repro.serving import (
     StageObservation,
     delayed_stage_fn_builder,
     governed_stage_fn_builder,
+    mmpp_trace,
     run_adaptive_loop,
     run_governed_loop,
+    run_slo_governed_loop,
     serve,
 )
 
@@ -570,3 +576,203 @@ def test_serve_adaptive_end_to_end(tiny):
     finally:
         server.stop()
     assert server.monitor.controller.swaps > swaps0
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 6: queue-aware control plane (QueueController, SLO-aware DVFS loop)
+# ---------------------------------------------------------------------------
+def _gt_tiny():
+    from benchmarks.common import gt_time_matrix, tiny_graph as bench_tiny
+
+    return gt_time_matrix(bench_tiny("tinyA", 8).descriptors())
+
+
+def test_queue_controller_admission_and_counters():
+    ctrl = QueueController(
+        QueuePolicy(slo_p99_s=0.1, shed_headroom=0.9),
+        base_latency_s=0.04,
+        service_s=0.01,
+    )
+    # budget for queue wait = 0.9*0.1 - 0.04 = 0.05
+    assert ctrl.should_admit(0.04)
+    assert not ctrl.should_admit(0.06)
+    assert ctrl.should_admit(0.05)
+    assert (ctrl.admitted, ctrl.shed) == (2, 1)
+    cb = ctrl.admit_callback()
+    assert cb(123.0, 0.0) and not cb(456.0, 1.0)
+    assert (ctrl.admitted, ctrl.shed) == (3, 2)
+
+
+def test_queue_controller_rate_ewma_and_utilization():
+    ctrl = QueueController(
+        QueuePolicy(slo_p99_s=1.0, rate_alpha=0.5),
+        base_latency_s=0.1,
+        service_s=0.01,
+    )
+    assert ctrl.utilization == 0.0
+    for k in range(1, 11):
+        ctrl.observe_arrival(k * 0.02)  # steady 50/s
+    assert ctrl.rate_hat == pytest.approx(50.0, rel=0.05)
+    assert ctrl.utilization == pytest.approx(0.5, rel=0.05)
+
+
+def test_queue_controller_flush_timeout_clamps():
+    pol = QueuePolicy(slo_p99_s=0.1, min_flush_s=0.001, max_flush_s=0.02,
+                      flush_fraction=0.1)
+    ctrl = QueueController(pol, base_latency_s=0.04, service_s=0.01)
+    # idle: 10% of the 0.06s wait budget = 6ms, inside the clamps
+    assert ctrl.flush_timeout() == pytest.approx(0.006)
+    # saturated: flush immediately at the max (drain as fast as possible)
+    for k in range(1, 30):
+        ctrl.observe_arrival(k * 0.005)  # 200/s against 100/s capacity
+    assert ctrl.utilization >= 1.0
+    assert ctrl.flush_timeout() == pol.max_flush_s
+    # a tiny budget clamps at the floor
+    tight = QueueController(QueuePolicy(slo_p99_s=0.05, min_flush_s=0.001),
+                            base_latency_s=0.049, service_s=0.001)
+    assert tight.flush_timeout() == 0.001
+
+
+def test_queue_controller_batch_recommendation():
+    ctrl = QueueController(QueuePolicy(slo_p99_s=1.0), base_latency_s=0.1,
+                           service_s=0.01)
+    assert ctrl.recommended_batch(4) == 2  # idle: halve
+    for k in range(1, 30):
+        ctrl.observe_arrival(k * 0.0125)  # 80/s -> utilization 0.8
+    assert ctrl.recommended_batch(4) == 8  # pressed: double
+    assert ctrl.recommended_batch(8, max_batch=8) == 8
+    with pytest.raises(ValueError):
+        QueueController(QueuePolicy(slo_p99_s=1.0), base_latency_s=0.1,
+                        service_s=0.0)
+
+
+def test_controller_set_load_is_frequency_only_and_slo_safe():
+    """set_load() re-slack-matches clocks for a new measured rate: the
+    plan must not change, and the p99 at the scaled service times must
+    stay inside the SLO budget — for a burst rate that the min-energy
+    clocks (ignoring the SLO) would violate."""
+    T = _gt_tiny()
+    n = len(T)
+    plan = pipe_it_search(n, PLAT, T, mode="best")
+    cap = plan.throughput(T)
+    slo_s = 0.004
+    ctrl = AdaptiveController(
+        prior=T, plan=plan, platform=PLAT, objective="min_energy",
+        slo_p99_s=slo_s, arrival_rate=0.1 * cap,
+    )
+    calm_pplan = ctrl.power_plan
+    burst = 0.45 * cap
+    pplan = ctrl.set_load(burst)
+    assert pplan.plan == plan  # frequency-only: no drain, no re-split
+    assert pplan.feasible and pplan.p99_s <= slo_s
+    # the calm clocks would NOT have survived the burst
+    calm_at_burst = evaluate_frequencies(
+        plan, T, PLAT, calm_pplan.stage_freqs,
+        slo_p99_s=slo_s, arrival_rate=burst,
+    )
+    assert calm_at_burst.p99_s is None or calm_at_burst.p99_s > slo_s
+    with pytest.raises(ValueError):
+        ctrl.set_load(0.0)
+    plain = AdaptiveController(prior=T, plan=plan, platform=PLAT)
+    with pytest.raises(ValueError):
+        plain.set_load(1.0)  # needs an SLO-aware controller
+
+
+def test_slo_governor_never_downclocks_into_violation():
+    """ISSUE 6 satellite: MMPP burst/calm on the simulated clock — every
+    window's simulated p99 stays under the SLO with the SLO-aware
+    governor, while unconstrained min-energy clocking violates it during
+    bursts.  Deterministic: same trace/seed -> bit-identical trajectory."""
+    T = _gt_tiny()
+    n = len(T)
+    plan = pipe_it_search(n, PLAT, T, mode="best")
+    cap = plan.throughput(T)
+    slo_s, window_s = 0.004, 1.0
+    trace = mmpp_trace(0.1 * cap, 0.45 * cap, duration_s=60.0,
+                       calm_s=5.0, burst_s=3.0, seed=5)
+
+    def slo_run():
+        ctrl = AdaptiveController(
+            prior=T, plan=plan, platform=PLAT, objective="min_energy",
+            slo_p99_s=slo_s, arrival_rate=0.1 * cap,
+        )
+        gov = DvfsGovernor(PLAT, ctrl, server=None)
+        worst = PLAT.freq_scale("B", PLAT.freq_levels("B")[0])
+        admission = QueueController(
+            QueuePolicy(slo_p99_s=slo_s, shed_headroom=0.9),
+            base_latency_s=predict_latency(
+                plan, T, PLAT, 1e-9).base_latency_s * worst,
+            service_s=worst / cap,
+        )
+        return run_slo_governed_loop(
+            gov, OpenLoopServing(T, PLAT), trace, window_s=window_s,
+            admission=admission,
+        )
+
+    recs = slo_run()
+    active = [r for r in recs if r["n_arrivals"]]
+    assert max(r["p99_s"] for r in active) <= slo_s
+    # sheds only the handful of straddling-window arrivals, if any
+    assert sum(r["shed"] for r in recs) <= 0.01 * trace.n
+    # the governor moved clocks between calm and burst windows
+    assert len({tuple(r["freqs_ghz"]) for r in active}) > 1
+    assert recs == slo_run()  # deterministic
+
+    # contrast: same objective, no SLO -> lowest OPPs -> burst violation
+    ctrl_u = AdaptiveController(prior=T, plan=plan, platform=PLAT,
+                                objective="min_energy", power_cap_w=100.0)
+    gov_u = DvfsGovernor(PLAT, ctrl_u, server=None)
+    env_u = OpenLoopServing(T, PLAT)
+    unc = []
+    for w in range(int(trace.duration_s / window_s) + 1):
+        arrivals = trace.window(w * window_s, (w + 1) * window_s)
+        r = env_u.window(plan, arrivals, window_s=window_s,
+                         stage_freqs=gov_u.stage_freqs)
+        if arrivals:
+            unc.append(r.latency_p99_s)
+    assert max(unc) > 2.0 * slo_s
+
+
+def test_cap_throttle_during_burst_no_dropped_tickets():
+    """ISSUE 6 satellite: a thermal cap drop arriving mid-burst re-plans
+    under the new envelope without losing a single in-flight or queued
+    ticket — the windowed queue carry drains the old plan's backlog into
+    the new configuration."""
+    T = _gt_tiny()
+    n = len(T)
+    envelope = PLAT.max_power_w()
+    pplan = power_aware_search(n, PLAT, T, mode="best", power_cap_w=envelope)
+    ctrl = AdaptiveController(prior=T, plan=pplan.plan, platform=PLAT,
+                              power_cap_w=envelope)
+    gov = DvfsGovernor(PLAT, ctrl, server=None)
+    env = OpenLoopServing(T, PLAT)
+    cap = pplan.plan.throughput(T)
+    trace = mmpp_trace(0.1 * cap, 0.5 * cap, duration_s=30.0,
+                       calm_s=4.0, burst_s=6.0, seed=3)
+    window_s = 1.0
+    new_cap = 0.40 * envelope
+    done = shed = 0
+    throttled_at = None
+    for w in range(int(trace.duration_s / window_s) + 1):
+        t0 = w * window_s
+        arrivals = trace.window(t0, t0 + window_s)
+        # fire the throttle inside the first burst phase
+        if throttled_at is None and any(
+            s <= t0 < e and r > 0.2 * cap for s, e, r in trace.meta["phases"]
+        ):
+            assert gov.power_plan.avg_power_w > new_cap
+            gov.throttle(new_cap)
+            throttled_at = t0
+        res = env.window(ctrl.plan, arrivals, window_s=window_s,
+                         stage_freqs=gov.stage_freqs)
+        done += len(res.finish_times)
+        shed += res.shed
+    assert throttled_at is not None
+    assert gov.throttle_events == 1
+    assert ctrl.power_cap_w == new_cap
+    assert gov.power_plan.feasible
+    # zero dropped tickets across the re-plan: every arrival completed
+    assert shed == 0
+    assert done == trace.n
+    # and the board actually runs under the new envelope afterwards
+    assert gov.power_plan.avg_power_w <= new_cap * 1.001

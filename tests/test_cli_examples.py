@@ -96,6 +96,30 @@ def test_power_benchmark_smoke():
     assert data["records"] and all("throughput_per_watt" in r for r in data["records"])
 
 
+def test_tail_latency_benchmark_smoke():
+    """Tiny tail-latency benchmark: the model-accuracy band, the SLO-plan
+    simulator check, and the governed-DVFS SLO-hold asserts run INSIDE
+    the benchmark (ISSUE 6 acceptance at tiny scale)."""
+    out = _run(
+        [sys.executable, "-m", "benchmarks.tail_latency", "--tiny"],
+        env=dict(ENV, REPRO_PALLAS_INTERPRET="1"),
+    )
+    assert "model_accuracy" in out and "worst_p99_err=" in out
+    assert "slo_planning" in out and "governed_dvfs" in out
+    import json
+    with open(os.path.join(REPO, "BENCH_tail_tiny.json")) as f:
+        data = json.load(f)
+    scen = {r["scenario"] for r in data["records"]}
+    assert scen == {"model_accuracy", "slo_planning", "governed_dvfs"}
+    acc = [r for r in data["records"] if r["scenario"] == "model_accuracy"]
+    assert acc and all(
+        r["p99_rel_err"] <= data["model_tolerance"] for r in acc
+    )
+    gov = next(r for r in data["records"] if r["scenario"] == "governed_dvfs")
+    assert gov["slo_aware_max_window_p99_s"] <= gov["slo_p99_s"]
+    assert gov["unconstrained_max_window_p99_s"] > 2 * gov["slo_p99_s"]
+
+
 @pytest.mark.slow  # ~6 min: full 10-arch TPU Pipe-it sweep (CI: -m slow step)
 def test_pipeit_tpu_example():
     out = _run([sys.executable, "examples/pipeit_tpu.py"], timeout=560)

@@ -1,0 +1,225 @@
+"""Open-loop load generation (serving/loadgen.py): seeded determinism,
+JSON replay round-trips, trace algebra (window / scale), validation, and
+the live ``run_open_loop`` driver against a real ``PipelineServer``.
+
+The same ``ArrivalTrace`` objects drive both the live server and
+``core.simulator.simulate(arrival_s=...)`` — determinism here is what
+makes the simulator-vs-model pins in tests/test_queueing.py and the
+BENCH_tail numbers reproducible.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cnn.graph import Graph
+from repro.serving import (
+    ArrivalTrace,
+    PipelineServer,
+    QueueController,
+    QueuePolicy,
+    diurnal_trace,
+    mmpp_trace,
+    poisson_trace,
+    run_open_loop,
+)
+
+GENERATORS = {
+    "poisson": lambda seed: poisson_trace(50.0, n=200, seed=seed),
+    "mmpp": lambda seed: mmpp_trace(
+        20.0, 80.0, duration_s=5.0, calm_s=1.0, burst_s=0.5, seed=seed
+    ),
+    "diurnal": lambda seed: diurnal_trace(
+        10.0, 60.0, period_s=2.0, duration_s=4.0, seed=seed
+    ),
+}
+
+
+# ------------------------------------------------------------- determinism
+@pytest.mark.parametrize("name", sorted(GENERATORS))
+def test_same_seed_same_trace(name):
+    gen = GENERATORS[name]
+    a, b = gen(7), gen(7)
+    assert a.times == b.times
+    assert a.kind == b.kind
+    assert a.meta == b.meta
+
+
+@pytest.mark.parametrize("name", sorted(GENERATORS))
+def test_different_seed_different_trace(name):
+    gen = GENERATORS[name]
+    assert gen(1).times != gen(2).times
+
+
+def test_poisson_count_and_rate():
+    tr = poisson_trace(100.0, n=5000, seed=3)
+    assert tr.n == 5000
+    assert tr.kind == "poisson"
+    # offered rate concentrates around nominal (CLT: ~1.4% sd at n=5000)
+    assert tr.offered_rate() == pytest.approx(100.0, rel=0.05)
+    tr2 = poisson_trace(100.0, duration_s=50.0, seed=3)
+    assert tr2.duration_s <= 50.0
+    assert tr2.n == pytest.approx(5000, rel=0.1)
+
+
+def test_mmpp_phases_cover_duration():
+    tr = GENERATORS["mmpp"](5)
+    phases = tr.meta["phases"]
+    assert phases[0][0] == 0.0
+    assert phases[-1][1] == pytest.approx(5.0)
+    for (_, e0, r0), (s1, _, r1) in zip(phases, phases[1:]):
+        assert s1 == e0  # contiguous
+        assert {r0, r1} == {20.0, 80.0}  # strictly alternating
+    # every arrival lands inside the declared duration
+    assert all(0.0 <= t <= 5.0 for t in tr.times)
+
+
+def test_diurnal_mass_concentrates_at_peak():
+    tr = diurnal_trace(5.0, 100.0, period_s=10.0, duration_s=10.0, seed=1)
+    trough = len(tr.window(0.0, 2.5)) + len(tr.window(7.5, 10.0))
+    peak = len(tr.window(2.5, 7.5))
+    assert peak > 2 * trough
+
+
+# ------------------------------------------------------------ trace algebra
+def test_window_half_open():
+    tr = ArrivalTrace(times=(0.0, 1.0, 2.0, 3.0))
+    assert tr.window(1.0, 3.0) == (1.0, 2.0)
+    assert tr.window(0.0, 10.0) == tr.times
+    assert tr.window(5.0, 6.0) == ()
+
+
+def test_windows_partition_trace():
+    tr = GENERATORS["poisson"](9)
+    stitched = []
+    for w in range(50):
+        stitched.extend(tr.window(w * 0.5, (w + 1) * 0.5))
+    assert tuple(stitched) == tr.times
+
+
+def test_scaled_dilates_time():
+    tr = poisson_trace(50.0, n=100, seed=2)
+    slow = tr.scaled(4.0)
+    assert slow.n == tr.n
+    assert slow.offered_rate() == pytest.approx(tr.offered_rate() / 4.0)
+    assert slow.meta["time_scale"] == 4.0
+    with pytest.raises(ValueError):
+        tr.scaled(0.0)
+
+
+# ------------------------------------------------------------- JSON replay
+def test_json_round_trip():
+    tr = GENERATORS["mmpp"](11)
+    back = ArrivalTrace.from_json(tr.to_json())
+    assert back == tr
+
+
+def test_save_load_round_trip(tmp_path):
+    tr = GENERATORS["diurnal"](4)
+    path = str(tmp_path / "trace.json")
+    tr.save(path)
+    back = ArrivalTrace.load(path)
+    assert back == tr
+    assert back.kind == "diurnal"
+
+
+def test_replay_defaults():
+    back = ArrivalTrace.from_json('{"times": [0.5, 1.5]}')
+    assert back.kind == "replay"
+    assert back.meta == {}
+    assert back.times == (0.5, 1.5)
+
+
+# -------------------------------------------------------------- validation
+def test_validation_errors():
+    with pytest.raises(ValueError):
+        ArrivalTrace(times=(1.0, 0.5))  # descending
+    with pytest.raises(ValueError):
+        ArrivalTrace(times=(-1.0, 0.5))  # negative
+    with pytest.raises(ValueError):
+        poisson_trace(0.0, n=10)
+    with pytest.raises(ValueError):
+        poisson_trace(1.0)  # neither duration nor n
+    with pytest.raises(ValueError):
+        poisson_trace(1.0, duration_s=1.0, n=10)  # both
+    with pytest.raises(ValueError):
+        mmpp_trace(0.0, 1.0, duration_s=1.0, calm_s=1.0, burst_s=1.0)
+    with pytest.raises(ValueError):
+        mmpp_trace(1.0, 2.0, duration_s=0.0, calm_s=1.0, burst_s=1.0)
+    with pytest.raises(ValueError):
+        diurnal_trace(5.0, 1.0, period_s=1.0, duration_s=1.0)  # peak < base
+
+
+# ----------------------------------------------------------- live driver
+def _tiny_graph() -> Graph:
+    g = Graph("tiny", (16, 16, 3))
+    a = g.conv("c1", "input", 8, 3)
+    a = g.conv("c2", a, 8, 3, stride=2)
+    a = g.gap("gap", a)
+    a = g.fc("fc", a, 10)
+    g.softmax("sm", a)
+    return g
+
+
+@pytest.fixture(scope="module")
+def live():
+    g = _tiny_graph()
+    params = g.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    images = [
+        jnp.asarray(rng.standard_normal((1, 16, 16, 3)), jnp.float32)
+        for _ in range(4)
+    ]
+    return g, params, images
+
+
+def test_run_open_loop_live(live):
+    g, params, images = live
+    from repro.core import PipelinePlan, Pipeline
+
+    plan = PipelinePlan(
+        Pipeline((("B", 4),)), (tuple(range(len(g.descriptors()))),)
+    )
+    trace = poisson_trace(40.0, n=12, seed=0)
+    with PipelineServer(g, params, plan, batch_size=2,
+                        flush_timeout_s=0.005) as srv:
+        srv.warmup()
+        report = run_open_loop(srv, trace, images, result_timeout_s=60.0)
+    assert report.offered == 12
+    assert report.completed == report.submitted
+    assert report.completed + report.shed_backpressure == 12
+    assert report.shed_admission == 0
+    assert len(report.latencies_s) == report.completed
+    assert all(x > 0.0 for x in report.latencies_s)
+    assert report.latency_p50_s <= report.latency_p99_s
+    assert report.goodput > 0.0
+
+
+def test_run_open_loop_admission_shedding(live):
+    g, params, images = live
+    from repro.core import PipelinePlan, Pipeline
+
+    plan = PipelinePlan(
+        Pipeline((("B", 4),)), (tuple(range(len(g.descriptors()))),)
+    )
+    # an SLO no real server can meet: the controller sheds everything
+    ctrl = QueueController(
+        QueuePolicy(slo_p99_s=1e-9, shed_headroom=1.0),
+        base_latency_s=1.0,
+        service_s=0.01,
+    )
+    trace = poisson_trace(100.0, n=10, seed=1)
+    with PipelineServer(g, params, plan, batch_size=2) as srv:
+        report = run_open_loop(srv, trace, images, controller=ctrl)
+    assert report.shed_admission == 10
+    assert report.submitted == report.completed == 0
+    assert ctrl.shed == 10
+
+
+def test_run_open_loop_validation(live):
+    g, params, images = live
+    trace = poisson_trace(1.0, n=1)
+    with pytest.raises(ValueError):
+        run_open_loop(None, trace, [])
+    with pytest.raises(ValueError):
+        run_open_loop(None, trace, images, timescale=0.0)

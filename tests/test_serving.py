@@ -477,3 +477,62 @@ def test_multimodel_stress_concurrent_clients_with_repartition():
             )
     finally:
         mm.stop()
+
+
+# ------------------------------------------------- queue-wait metrics (ISSUE 6)
+def test_queue_wait_metrics_pinned():
+    """The queue-wait percentile keys on synthetic enqueue/dequeue pairs —
+    pinned values, no threading."""
+    from repro.serving import ServerMetrics
+
+    m = ServerMetrics(["s0"])
+    for k in range(1, 101):  # waits 1..100 ms
+        m.note_dequeue(submitted_at=0.0, now=k * 1e-3)
+    for k in range(1, 101):  # e2e = wait + 10ms service
+        m.note_complete(submitted_at=0.0, now=k * 1e-3 + 10e-3)
+    snap = m.snapshot()
+    assert snap["queue_wait_p50_s"] == pytest.approx(0.050)
+    assert snap["queue_wait_p95_s"] == pytest.approx(0.095)
+    assert snap["queue_wait_p99_s"] == pytest.approx(0.099)
+    # e2e (which includes the wait) dominates the wait at every quantile
+    assert snap["e2e_p50_s"] == pytest.approx(0.060)
+    assert snap["e2e_p99_s"] == pytest.approx(0.109)
+    for q in (50, 95, 99):
+        assert snap[f"queue_wait_p{q}_s"] < snap[f"e2e_p{q}_s"]
+
+
+def test_ticket_timestamps_and_live_queue_wait(setup):
+    """Every completed ticket carries both timestamps (enqueue stamped in
+    submit(), dequeue stamped by the stage-0 worker) and the snapshot
+    reports the resulting queue-wait percentiles."""
+    g, params, images, plan = setup
+    with PipelineServer(g, params, plan, batch_size=2,
+                        flush_timeout_s=0.002) as srv:
+        tickets = [srv.submit(img) for img in images]
+        for t in tickets:
+            t.result(timeout=60.0)
+        snap = srv.metrics.snapshot()
+    for t in tickets:
+        assert t.dequeued_at is not None
+        assert t.dequeued_at >= t.submitted_at
+    waits = [t.dequeued_at - t.submitted_at for t in tickets]
+    assert snap["queue_wait_p99_s"] >= snap["queue_wait_p50_s"] >= 0.0
+    assert snap["queue_wait_p99_s"] <= max(waits) + 1e-9
+    # e2e latency includes the queue wait component
+    assert snap["e2e_p50_s"] >= snap["queue_wait_p50_s"]
+
+
+def test_set_batching_live_and_ingress_depth(setup):
+    g, params, images, plan = setup
+    with PipelineServer(g, params, plan, batch_size=4,
+                        flush_timeout_s=0.05) as srv:
+        assert srv.ingress_depth() == 0
+        srv.set_batching(batch_size=2, flush_timeout_s=0.001)
+        assert srv.batch_size == 2
+        assert srv.flush_timeout_s == 0.001
+        out = srv.run(images)  # still serves correctly after the retune
+        assert out["metrics"]["completed"] == len(images)
+        with pytest.raises(ValueError):
+            srv.set_batching(batch_size=0)
+        with pytest.raises(ValueError):
+            srv.set_batching(flush_timeout_s=-1.0)
