@@ -1,0 +1,291 @@
+"""Scenario-matrix regression gate over the unified plan evaluator.
+
+Every cell of a (workload x objective x power-cap x SLO) grid is planned
+and scored through the ONE code path the searches use
+(``core.plan.evaluate`` — PR 7's IR), then cross-checked against the
+discrete-event simulator.  The whole stack is deterministic (analytic
+ground-truth matrices, seedless closed-loop simulator), so each cell's
+tracked metrics — scalar score, throughput, modeled power, and the
+chosen plan's notation — are pinned against a committed baseline at
+tight tolerance.  Any silent change to the evaluator, an objective, a
+constraint, or a search shows up here as a failing cell *naming the
+scenario that moved*, not as a green refactor.
+
+    PYTHONPATH=src:. python -m benchmarks.scenario_matrix --tiny            # print + write JSON
+    PYTHONPATH=src:. python -m benchmarks.scenario_matrix --tiny --check    # CI gate vs baseline
+    PYTHONPATH=src:. python -m benchmarks.scenario_matrix --tiny --update-baseline
+
+``--check`` also schema-asserts every ``BENCH_*_tiny.json`` present at
+the repo root (the power/tail benchmarks run earlier in CI), so a
+benchmark that starts emitting an empty or malformed trajectory file
+fails here instead of being archived quietly.
+"""
+import argparse
+import glob
+import json
+import os
+import sys
+
+from repro.core import (
+    MinThroughput,
+    Plan,
+    PowerCap,
+    TailSlo,
+    evaluate,
+    hikey970,
+    latency_aware_search,
+    pipe_it_search,
+    power_aware_search,
+)
+
+from .common import REPO_ROOT, cnn_descriptors, gt_time_matrix, tiny_graph, write_bench_json
+
+PLAT = hikey970()  # DVFS-enabled: the full objective/constraint space
+CAP_FRAC = 0.55  # binding power cap as a fraction of the all-max envelope
+FLOOR_FRAC = 0.70  # min-throughput floor as a fraction of peak
+SLO_RATE_FRAC = 0.60  # open-loop demand as a fraction of peak
+# p99 budgets as multiples of the peak cycle time: a tight one (nothing
+# fits: pins the best-effort ordering) and a loose one (feasible: pins
+# the feasible-side ordering).
+SLO_FACTORS = (3.0, 12.0)
+N_IMAGES = 48  # closed-loop simulator cross-check length
+REL_TOL = 1e-6  # tracked analytic metrics are deterministic
+SIM_TOL = 0.10  # simulator-vs-model throughput band (startup transient)
+BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "scenario_baseline.json")
+
+
+def _workloads(tiny: bool):
+    loads = {
+        "tiny8": gt_time_matrix(tiny_graph("tiny8", 8).descriptors()),
+        "tiny12": gt_time_matrix(tiny_graph("tiny12", 12).descriptors()),
+    }
+    if not tiny:
+        loads["alexnet"] = gt_time_matrix(cnn_descriptors("alexnet"))
+    return loads
+
+
+def _power_cells(workload, T):
+    """DVFS cells: 3 objectives x {uncapped, binding cap} (+ the floor
+    min_energy needs to be meaningful), each planned by the production
+    search and re-scored through evaluate() on the plan IR."""
+    base = pipe_it_search(len(T), PLAT, T, mode="best")
+    peak = base.throughput(T)
+    cap = CAP_FRAC * PLAT.max_power_w()
+    floor = FLOOR_FRAC * peak
+    cells = []
+    for objective in ("throughput", "throughput_per_watt", "min_energy"):
+        for cap_w in (None, cap):
+            constraints = []
+            if cap_w is not None:
+                constraints.append(PowerCap(cap_w))
+            kw = {}
+            if objective == "min_energy":
+                constraints.append(MinThroughput(floor))
+                kw["min_throughput"] = floor
+            pap = power_aware_search(
+                len(T), PLAT, T, power_cap_w=cap_w, objective=objective, **kw
+            )
+            ev = evaluate(
+                pap.plan_ir(), T, PLAT,
+                objective=objective, constraints=constraints,
+            )
+            cells.append((
+                {
+                    "workload": workload,
+                    "objective": objective,
+                    "cap_frac": None if cap_w is None else CAP_FRAC,
+                    "slo": None,
+                },
+                ev,
+            ))
+    return cells
+
+
+def _slo_cells(workload, T):
+    """The latency axis: plan under an open-loop rate + p99 budget, score
+    the winner through the same evaluator with the TailSlo constraint."""
+    base = pipe_it_search(len(T), PLAT, T, mode="best")
+    peak = base.throughput(T)
+    rate = SLO_RATE_FRAC * peak
+    cells = []
+    for factor in SLO_FACTORS:
+        slo = factor / peak
+        sp = latency_aware_search(
+            len(T), PLAT, T, arrival_rate=rate, slo_p99_s=slo
+        )
+        ev = evaluate(
+            sp.plan_ir(), T, PLAT,
+            objective="slo_throughput",
+            constraints=(TailSlo(slo, headroom=sp.headroom),),
+            arrival_rate=rate,
+        )
+        cells.append((
+            {
+                "workload": workload,
+                "objective": "slo_throughput",
+                "cap_frac": None,
+                "slo": {"rate_frac": SLO_RATE_FRAC, "factor": factor},
+            },
+            ev,
+        ))
+    return cells
+
+
+def _cell_key(cell):
+    slo = cell["slo"]
+    return "|".join([
+        cell["workload"],
+        cell["objective"],
+        "uncapped" if cell["cap_frac"] is None else f"cap{cell['cap_frac']}",
+        "noslo" if slo is None else f"slo{slo['factor']}@{slo['rate_frac']}",
+    ])
+
+
+def run_matrix(tiny: bool):
+    records = []
+    for workload, T in sorted(_workloads(tiny).items()):
+        cells = _power_cells(workload, T)
+        cells.extend(_slo_cells(workload, T))
+        for cell, ev in cells:
+            m = ev.metrics
+            sim = evaluate(
+                ev.plan, T, PLAT, backend="simulate", n_images=N_IMAGES
+            )
+            rec = {
+                **cell,
+                "key": _cell_key(cell),
+                "plan": ev.plan.notation(),
+                "score": ev.score[0],
+                "feasible": ev.feasible,
+                "throughput": m.throughput,
+                "avg_power_w": m.avg_power_w,
+                "energy_per_image_j": m.energy_per_image_j,
+                "p99_s": m.p99_s,
+                "sim_throughput": sim.metrics.throughput,
+                "sim_avg_power_w": sim.metrics.avg_power_w,
+            }
+            drift = abs(rec["sim_throughput"] - rec["throughput"]) / max(
+                rec["throughput"], 1e-12
+            )
+            if drift > SIM_TOL:
+                raise SystemExit(
+                    f"FAIL {rec['key']}: simulator throughput "
+                    f"{rec['sim_throughput']:.3f} img/s drifts {drift:.1%} "
+                    f"from the model's {rec['throughput']:.3f} img/s"
+                )
+            records.append(rec)
+    return records
+
+
+# ------------------------------------------------------------ baseline gate
+#: metric -> is-a-regression(current, baseline).  Score and throughput are
+#: one-sided (an improvement is not a failure — refresh the baseline to
+#: ratchet it); power is one-sided the other way; the plan itself and
+#: feasibility must not move at all.
+def _regressions(rec, base):
+    out = []
+    if rec["plan"] != base["plan"]:
+        out.append(f"plan changed: {base['plan']!r} -> {rec['plan']!r}")
+    if rec["feasible"] != base["feasible"]:
+        out.append(f"feasible flipped: {base['feasible']} -> {rec['feasible']}")
+    for metric, worse_if_below in (("score", True), ("throughput", True),
+                                   ("avg_power_w", False)):
+        cur, ref = rec[metric], base[metric]
+        tol = REL_TOL * max(abs(ref), 1e-12)
+        if worse_if_below and cur < ref - tol:
+            out.append(f"{metric} regressed: {ref:.6g} -> {cur:.6g}")
+        if not worse_if_below and cur > ref + tol:
+            out.append(f"{metric} regressed: {ref:.6g} -> {cur:.6g}")
+    return out
+
+
+def check_against_baseline(records):
+    if not os.path.exists(BASELINE):
+        raise SystemExit(
+            f"FAIL: no baseline at {BASELINE}; run with --update-baseline "
+            "and commit it"
+        )
+    with open(BASELINE) as f:
+        baseline = {r["key"]: r for r in json.load(f)["records"]}
+    current = {r["key"]: r for r in records}
+    failures = []
+    for key in sorted(set(baseline) - set(current)):
+        failures.append(f"{key}: cell vanished from the matrix")
+    for key in sorted(set(current) - set(baseline)):
+        failures.append(f"{key}: new cell not in baseline (refresh it)")
+    for key in sorted(set(current) & set(baseline)):
+        failures.extend(f"{key}: {msg}"
+                        for msg in _regressions(current[key], baseline[key]))
+    return failures
+
+
+def check_bench_schemas():
+    """Every tiny trajectory file CI archived so far must be well-formed."""
+    failures = []
+    for path in sorted(glob.glob(os.path.join(REPO_ROOT, "BENCH_*_tiny.json"))):
+        name = os.path.basename(path)
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, ValueError) as e:
+            failures.append(f"{name}: unreadable ({e})")
+            continue
+        recs = payload.get("records")
+        if not isinstance(recs, list) or not recs:
+            failures.append(f"{name}: no 'records' list (or empty)")
+            continue
+        bad = [i for i, r in enumerate(recs)
+               if not isinstance(r, dict) or not r]
+        if bad:
+            failures.append(f"{name}: malformed records at {bad}")
+        else:
+            print(f"  schema ok: {name} ({len(recs)} records)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI-smoke grid (the baselined one)")
+    ap.add_argument("--check", action="store_true",
+                    help="fail on any tracked-metric regression vs baseline")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite benchmarks/scenario_baseline.json")
+    args = ap.parse_args(argv)
+    if (args.check or args.update_baseline) and not args.tiny:
+        ap.error("--check/--update-baseline gate the --tiny grid only")
+
+    records = run_matrix(args.tiny)
+    print(f"scenario matrix: {len(records)} cells")
+    for r in records:
+        flag = "ok " if r["feasible"] else "INF"
+        print(f"  [{flag}] {r['key']:<44} score={r['score']:.4g} "
+              f"tp={r['throughput']:.3f} P={r['avg_power_w']:.2f}W  {r['plan']}")
+
+    suffix = "_tiny" if args.tiny else ""
+    out = write_bench_json(
+        f"BENCH_scenarios{suffix}.json",
+        {"grid": "workload x objective x cap x slo", "records": records},
+    )
+    print(f"wrote {out}")
+
+    if args.update_baseline:
+        with open(BASELINE, "w") as f:
+            json.dump({"records": records}, f, indent=1)
+            f.write("\n")
+        print(f"baseline refreshed: {BASELINE}")
+        return 0
+    if args.check:
+        failures = check_against_baseline(records) + check_bench_schemas()
+        if failures:
+            for msg in failures:
+                print(f"FAIL {msg}", file=sys.stderr)
+            return 1
+        print(f"baseline check passed: {len(records)} cells within "
+              f"{REL_TOL:g} rel tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -42,8 +42,23 @@ from .pipeline import (
     enumerate_pipelines,
     stage_time,
 )
+from .plan import (
+    SLO_PENALTY,
+    Evaluation,
+    FreqAssignment,
+    MinThroughput,
+    Plan,
+    PowerCap,
+    Share,
+    SloP99,
+    TailSlo,
+    partition_parts,
+    partition_rank_key,
+    partition_score,
+)
+from .plan import evaluate as evaluate_plan
 from .platform import HeteroPlatform, StageConfig
-from .queueing import LatencyPrediction, md1_wait_quantile, predict_latency
+from .queueing import LatencyPrediction
 
 
 def find_split(
@@ -210,15 +225,15 @@ def pipeline_sweep(
     (Eq. 1 gives 64 on the 4+4 platform) — the exponential blow-up is in
     the split points, which ``work_flow`` resolves heuristically.  Running
     work_flow on every pipeline is cheap and never worse than Algorithm 3
-    (recorded in DESIGN.md §2 / EXPERIMENTS.md §Perf as an improvement)."""
-    best: Optional[PipelinePlan] = None
-    best_tp = -1.0
-    for plan in _sweep_plans(n_layers, platform, T):
-        tp = plan.throughput(T)
-        if tp > best_tp:
-            best, best_tp = plan, tp
-    assert best is not None
-    return best
+    (recorded in DESIGN.md §2 / EXPERIMENTS.md §Perf as an improvement).
+
+    Candidates are ranked through the unified evaluator (``core.plan``);
+    ``max`` keeps the first of rank-equal candidates, matching the
+    pre-IR ``tp > best_tp`` loop exactly."""
+    return max(
+        _sweep_plans(n_layers, platform, T),
+        key=lambda plan: evaluate_plan(Plan.from_legacy(plan), T, platform).rank,
+    )
 
 
 def pipe_it_search(
@@ -275,7 +290,9 @@ def pipe_it_search(
     if mode == "best":
         a = merge_stage(list(range(n_layers)), platform, T)
         b = pipeline_sweep(n_layers, platform, T)
-        return a if a.throughput(T) >= b.throughput(T) else b
+        ra = evaluate_plan(Plan.from_legacy(a), T, platform).rank
+        rb = evaluate_plan(Plan.from_legacy(b), T, platform).rank
+        return a if ra >= rb else b
     raise ValueError(f"unknown mode {mode!r}")
 
 
@@ -301,9 +318,6 @@ def pipe_it_search(
 # "Race to idle" (everything at f_max) is always emitted as a candidate;
 # under the convex V(f) curve it loses to pace-to-bottleneck on energy,
 # which is exactly the trade the benchmark quantifies.
-
-#: Per-stage OPP choice; None marks a fixed-clock cluster's single level.
-FreqAssignment = Tuple[Optional[float], ...]
 
 #: "throughput" — max img/s (under the cap); "throughput_per_watt" — max
 #: img/s per modeled watt; "min_energy" — min energy per image subject to
@@ -332,12 +346,21 @@ class PowerAwarePlan:
     p99_s: Optional[float] = None
     slo_p99_s: Optional[float] = None
     arrival_rate: Optional[float] = None
+    # The unified-evaluator record this shim was scored by (core.plan);
+    # None only on hand-constructed instances.
+    evaluation: Optional[Evaluation] = dataclasses.field(
+        default=None, compare=False, repr=False
+    )
 
     def notation(self) -> str:
         freqs = "/".join(
             "fix" if f is None else f"{f / 1e9:.2f}GHz" for f in self.stage_freqs
         )
         return f"{self.plan.notation()}  @ {freqs}"
+
+    def plan_ir(self) -> Plan:
+        """This point of the design space as the unified IR."""
+        return Plan.from_legacy(self)
 
 
 def stage_times_at(
@@ -394,51 +417,44 @@ def evaluate_frequencies(
         )
     if (slo_p99_s is None) != (arrival_rate is None):
         raise ValueError("slo_p99_s and arrival_rate must be set together")
-    times = stage_times_at(plan, T, platform, stage_freqs)
-    cycle = max(max(times), 1e-12)
-    energy = sum(
-        platform.active_power_w(stage[0], stage[1], f) * t
-        for stage, f, t in zip(plan.pipeline.stages, stage_freqs, times)
-    )
-    avg_power = energy / cycle
-    tp = 1.0 / cycle
-    if objective == "throughput_per_watt":
-        # Zero MODELED watts (fixed-clock clusters) reads as 'free'
-        # throughput: the epsilon floor makes such plans dominate powered
-        # ones (consistent with the model's claim that they cost nothing)
-        # while ranking among themselves by img/s — so on a fully
-        # fixed-clock platform the ordering degrades to plain throughput.
-        score = tp / max(avg_power, 1e-12)
-    elif objective == "min_energy":
-        # Same convention: zero modeled joules outranks any positive
-        # energy; among free plans, more img/s first (the tiny positive
-        # scale keeps every zero-energy score above every -energy one).
-        score = -energy if energy > 0.0 else tp * 1e-15
-    else:
-        score = tp
-    p99 = None
+    if len(stage_freqs) != plan.pipeline.p:
+        raise ValueError(
+            f"{len(stage_freqs)} stage_freqs for {plan.pipeline.p} stages"
+        )
+    constraints = []
+    if power_cap_w is not None:
+        constraints.append(PowerCap(power_cap_w))
+    if min_throughput is not None:
+        constraints.append(MinThroughput(min_throughput))
     if slo_p99_s is not None:
-        # Friedman reduction (core.queueing): e2e p99 = sum of stage
-        # times + the bottleneck's M/D/1 p99 wait (inf when rate >= 1/cycle).
-        p99 = sum(times) + md1_wait_quantile(0.99, arrival_rate, cycle)
-    feasible = (
-        (power_cap_w is None or avg_power <= power_cap_w * (1 + 1e-9))
-        and (min_throughput is None or tp >= min_throughput * (1 - 1e-9))
-        and (p99 is None or p99 <= slo_p99_s * (1 + 1e-9))
+        constraints.append(SloP99(slo_p99_s))
+    ev = evaluate_plan(
+        Plan(
+            stages=plan.pipeline.stages,
+            allocation=plan.allocation,
+            stage_freqs=tuple(stage_freqs),
+        ),
+        T,
+        platform,
+        objective=objective,
+        constraints=constraints,
+        arrival_rate=arrival_rate,
     )
+    m = ev.metrics
     return PowerAwarePlan(
         plan=plan,
         stage_freqs=tuple(stage_freqs),
-        throughput=tp,
-        avg_power_w=avg_power,
-        energy_per_image_j=energy,
-        objective=score,
+        throughput=m.throughput,
+        avg_power_w=m.avg_power_w,
+        energy_per_image_j=m.energy_per_image_j,
+        objective=ev.score[0],
         objective_name=objective,
         power_cap_w=power_cap_w,
-        feasible=feasible,
-        p99_s=p99,
+        feasible=ev.feasible,
+        p99_s=m.p99_s if slo_p99_s is not None else None,
         slo_p99_s=slo_p99_s,
         arrival_rate=arrival_rate,
+        evaluation=ev,
     )
 
 
@@ -466,7 +482,15 @@ def _power_rank_key(
     a cap violation is a safety problem (least power first — closest to
     the envelope), but a missed throughput floor with the cap intact
     means demand outstrips capacity — best effort there is to run as
-    FAST as the cap allows, not to idle at minimum clocks."""
+    FAST as the cap allows, not to idle at minimum clocks.
+
+    Since the plan-IR migration this ordering lives in ``core.plan``
+    (severity-0 :class:`~.plan.PowerCap` vs severity-1
+    :class:`~.plan.MinThroughput`/:class:`~.plan.SloP99` tails); this
+    shim returns the stored :class:`~.plan.Evaluation` rank and only
+    reconstructs the key for hand-built instances."""
+    if p.evaluation is not None:
+        return p.evaluation.rank
     if p.feasible:
         return (2, p.objective, -p.avg_power_w)
     cap_ok = power_cap_w is None or p.avg_power_w <= power_cap_w * (1 + 1e-9)
@@ -650,6 +674,15 @@ class SloPlan:
     slo_p99_s: float
     headroom: float
     feasible: bool
+    # The unified-evaluator record this shim was scored by (core.plan);
+    # None only on hand-constructed instances.
+    evaluation: Optional[Evaluation] = dataclasses.field(
+        default=None, compare=False, repr=False
+    )
+
+    def plan_ir(self) -> Plan:
+        """This point of the design space as the unified IR."""
+        return Plan.from_legacy(self)
 
     def notation(self) -> str:
         p99 = (
@@ -667,7 +700,15 @@ def _slo_rank_key(s: SloPlan):
     """Feasibility floor first (the ``partition_search`` lexicographic
     idiom): among feasible plans, most throughput, then lowest p99; among
     stable-but-over-budget plans, closest to the budget; unstable plans
-    last, least-overloaded first."""
+    last, least-overloaded first.
+
+    Since the plan-IR migration this ordering lives in ``core.plan``
+    (the ``"slo_throughput"`` objective + :class:`~.plan.TailSlo`
+    constraint); this shim returns the stored
+    :class:`~.plan.Evaluation` rank and only reconstructs the key for
+    hand-built instances."""
+    if s.evaluation is not None:
+        return s.evaluation.rank
     if s.feasible:
         return (2, s.throughput, -s.prediction.p99_s)
     if s.prediction.stable:
@@ -712,19 +753,27 @@ def latency_aware_search(
         pl = _plan(Pipeline(stages=(stage,)), (all_layers,))
         if (pl.pipeline.stages, pl.allocation) not in seen:
             plans.append(pl)
+    constraints = (TailSlo(slo_p99_s, headroom=headroom),)
     best: Optional[SloPlan] = None
     for pl in plans:
-        pred = predict_latency(
-            pl, T, platform, arrival_rate, boundary_bytes=boundary_bytes
+        ev = evaluate_plan(
+            Plan.from_legacy(pl),
+            T,
+            platform,
+            objective="slo_throughput",
+            constraints=constraints,
+            arrival_rate=arrival_rate,
+            boundary_bytes=boundary_bytes,
         )
         cand = SloPlan(
             plan=pl,
-            prediction=pred,
-            throughput=pl.throughput(T),
+            prediction=ev.metrics.prediction,
+            throughput=ev.metrics.throughput,
             arrival_rate=arrival_rate,
             slo_p99_s=slo_p99_s,
             headroom=headroom,
-            feasible=pred.stable and pred.p99_s <= headroom * slo_p99_s,
+            feasible=ev.feasible,
+            evaluation=ev,
         )
         if best is None or _slo_rank_key(cand) > _slo_rank_key(best):
             best = cand
@@ -793,12 +842,8 @@ def _exhaustive_plan(
 # Two-level partition DSE: clusters across models, layers within each share
 # ---------------------------------------------------------------------------
 
-Share = Tuple[Tuple[str, int], ...]  # ((core_type, count), ...) for one model
-
-#: Relative-shortfall penalty that ranks every SLO-feasible assignment above
-#: every infeasible one while keeping infeasible ones ordered by how close
-#: they come (best-effort under overload).
-SLO_PENALTY = 1e9
+# Share and SLO_PENALTY live in core.plan since the IR migration; both
+# remain importable from here (re-exported above) for compatibility.
 
 
 def _nonneg_compositions(total: int, parts: int) -> List[Tuple[int, ...]]:
@@ -867,11 +912,13 @@ def partition_objective(
     feasibility first, then least total shortfall, then score — so a
     feasible assignment beats every infeasible one even when throughputs
     are large enough to swamp the finite penalty; this scalar is the
-    reported/compared form of that same ordering."""
-    score, shortfall = _objective_parts(
-        throughputs, weights, slo_rates, fairness
-    )
-    return score - SLO_PENALTY * shortfall
+    reported/compared form of that same ordering.
+
+    Since the IR migration both pieces live in ``core.plan``
+    (:func:`~.plan.partition_parts` with the :data:`~.plan.FAIRNESS`
+    registry, scalarised by :func:`~.plan.partition_score`); this
+    function is the compatibility name."""
+    return partition_score(throughputs, weights, slo_rates, fairness)
 
 
 def _objective_parts(
@@ -880,23 +927,8 @@ def _objective_parts(
     slo_rates: Optional[Sequence[float]],
     fairness: str,
 ) -> Tuple[float, float]:
-    """(score, total relative SLO shortfall) for one assignment."""
-    m = len(throughputs)
-    ws = list(weights) if weights is not None else [1.0] * m
-    slos = list(slo_rates) if slo_rates is not None else [0.0] * m
-    if len(ws) != m or len(slos) != m:
-        raise ValueError("weights/slo_rates must match throughputs")
-    weighted = [w * tp for w, tp in zip(ws, throughputs)]
-    if fairness == "sum":
-        score = sum(weighted)
-    elif fairness == "max-min":
-        score = min(weighted)
-    else:
-        raise ValueError(f"unknown fairness {fairness!r}")
-    shortfall = sum(
-        max(0.0, 1.0 - tp / slo) for tp, slo in zip(throughputs, slos) if slo > 0.0
-    )
-    return score, shortfall
+    """(score, total relative SLO shortfall) — shim over core.plan."""
+    return partition_parts(throughputs, weights, slo_rates, fairness)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -912,6 +944,10 @@ class ModelPlan:
 
     def notation(self) -> str:
         return f"{self.name}@{self.plan.notation()}"
+
+    def plan_ir(self) -> Plan:
+        """This model's slice as the unified IR (model + share + clocks)."""
+        return Plan.from_legacy(self)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -938,6 +974,10 @@ class PartitionPlan:
 
     def plans(self) -> Dict[str, PipelinePlan]:
         return {a.name: a.plan for a in self.assignments}
+
+    def plan_irs(self) -> Tuple[Plan, ...]:
+        """Every model's slice as the unified IR, in assignment order."""
+        return tuple(a.plan_ir() for a in self.assignments)
 
     def notation(self) -> str:
         return " | ".join(a.notation() for a in self.assignments)
@@ -984,7 +1024,8 @@ def _search_over_shares(
         power_ok = all(pp is None or pp.feasible for _, _, _, pp in solved)
         # lexicographic: feasibility beats any score, then least miss,
         # then score — immune to throughputs outscaling the penalty
-        key = (shortfall == 0.0 and power_ok, -shortfall, score)
+        # (the shared core.plan idiom)
+        key = partition_rank_key(score, shortfall, power_ok)
         if best_key is None or key > best_key:
             best_key = key
             best = PartitionPlan(

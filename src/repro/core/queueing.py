@@ -56,10 +56,14 @@ _DIRECT_MAX = 12.0
 
 
 def empirical_percentile(values: Sequence[float], q: float) -> float:
-    """Nearest-rank percentile (same rule as ``serving.metrics.percentile``).
+    """Nearest-rank percentile — THE canonical implementation.
 
-    Kept in core so the simulator can report latency percentiles without
-    importing the serving package.
+    The value at (1-based) rank ``ceil(q/100 * N)`` of the sorted
+    samples (clamped to [1, N]); 0.0 on empty input.  Lives in core so
+    the simulator can report latency percentiles without importing the
+    serving package; ``serving.metrics.percentile`` delegates here so
+    serving metrics and queueing predictions can never disagree on the
+    same samples.
     """
     if not values:
         return 0.0

@@ -25,10 +25,11 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import math
 import threading
 import time
 from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
+
+from ..core.queueing import empirical_percentile
 
 # Sliding-window sizes for latency samples (per stage / end-to-end).
 STAGE_WINDOW = 2048
@@ -49,14 +50,13 @@ def percentile(samples: Sequence[float], q: float) -> float:
     documented method and with itself across window sizes (round-half-to-
     even flips direction with the parity of the half-rank).  Pinned by
     regression fixtures in tests/test_serving.py.
+
+    Delegates to the single shared implementation
+    (``core.queueing.empirical_percentile``) so serving metrics, the
+    simulator, and the queueing model can never disagree on the same
+    samples — this repo used to carry two copies of the rule.
     """
-    if not samples:
-        return 0.0
-    xs = sorted(samples)
-    if q <= 0.0:
-        return xs[0]
-    rank = min(len(xs), math.ceil(q / 100.0 * len(xs)))  # 1-based
-    return xs[rank - 1]
+    return empirical_percentile(samples, q)
 
 
 @dataclasses.dataclass

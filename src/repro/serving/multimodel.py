@@ -227,8 +227,12 @@ class MultiModelServer:
                 self.stop()
             except Exception:
                 logger.exception(
-                    "multi-model server: stop() raised while unwinding %s "
-                    "(absorbed so the caller's original exception propagates)",
+                    "multi-model server [models=%s, epoch=%d, inflight=%d]: "
+                    "stop() raised while unwinding %s (absorbed so the "
+                    "caller's original exception propagates)",
+                    ",".join(sorted(self.servers)) or "<none>",
+                    self.partition_epoch,
+                    sum(self._admitted_inflight.values()),
                     exc_type.__name__,
                 )
 

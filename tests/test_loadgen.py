@@ -107,6 +107,47 @@ def test_scaled_dilates_time():
         tr.scaled(0.0)
 
 
+def test_scaled_provenance_composes():
+    """Repeated scaling records the CUMULATIVE dilation, not the last
+    factor — the replay meta must reconstruct the original timeline."""
+    tr = poisson_trace(50.0, n=50, seed=6)
+    twice = tr.scaled(2.0).scaled(3.0)
+    assert twice.meta["time_scale"] == pytest.approx(6.0)
+    assert twice.times[-1] == pytest.approx(tr.times[-1] * 6.0)
+    # other meta keys survive the rescale
+    assert twice.meta["rate"] == tr.meta["rate"]
+
+
+# ------------------------------------------------------- degenerate traces
+def test_empty_trace_offers_zero_load():
+    tr = ArrivalTrace(times=())
+    assert tr.duration_s == 0.0
+    assert tr.offered_rate() == 0.0  # documented: no arrivals, no load
+    assert tr.window(0.0, 1.0) == ()
+    assert tr.scaled(2.0).times == ()
+
+
+def test_zero_duration_trace_offered_rate_raises():
+    # a single arrival at t=0 (span 0) used to report ~1e12 img/s
+    with pytest.raises(ValueError, match="zero-duration"):
+        ArrivalTrace(times=(0.0,)).offered_rate()
+    # an instantaneous burst is just as undefined
+    with pytest.raises(ValueError, match="zero-duration"):
+        ArrivalTrace(times=(0.0, 0.0, 0.0)).offered_rate()
+
+
+def test_single_arrival_positive_span_is_fine():
+    tr = ArrivalTrace(times=(5.0,))
+    assert tr.offered_rate() == pytest.approx(0.2)
+
+
+def test_window_rejects_inverted_bounds():
+    tr = ArrivalTrace(times=(0.0, 1.0))
+    with pytest.raises(ValueError, match="end < start"):
+        tr.window(2.0, 1.0)
+    assert tr.window(1.0, 1.0) == ()  # empty-but-valid window
+
+
 # ------------------------------------------------------------- JSON replay
 def test_json_round_trip():
     tr = GENERATORS["mmpp"](11)

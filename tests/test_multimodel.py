@@ -581,3 +581,62 @@ def test_run_times_out_instead_of_hanging_on_stalled_pipeline(duo):
 def test_serve_empty_dict_raises():
     with pytest.raises(ValueError):
         serve({})
+
+
+# ------------------------------------------------- unwind-path observability
+def test_exit_logs_stop_failure_once_and_caller_exception_survives(
+    duo, caplog, monkeypatch
+):
+    """If stop() raises while unwinding a caller exception, the failure is
+    routed through the module logger EXACTLY once (with model/epoch/
+    inflight context) and absorbed — the caller's original exception, not
+    the shutdown error, is what propagates."""
+    import logging
+
+    reg, _images = duo
+    planner = AutoPlanner(platform=PLAT, mode="best")
+    part = planner.partition(reg.graphs())
+    mm = MultiModelServer(reg, part)
+    real_stop = mm.stop
+
+    def boom(timeout=30.0):
+        raise RuntimeError("shutdown exploded")
+
+    monkeypatch.setattr(mm, "stop", boom)
+    caplog.set_level(logging.ERROR, logger="repro.serving.multimodel")
+    try:
+        with pytest.raises(ValueError, match="original failure"):
+            with mm:
+                raise ValueError("original failure")
+    finally:
+        real_stop()  # the monkeypatched stop never ran: clean up for real
+    records = [
+        r for r in caplog.records
+        if r.name == "repro.serving.multimodel" and "stop() raised" in r.getMessage()
+    ]
+    assert len(records) == 1  # logged exactly once, not swallowed silently
+    msg = records[0].getMessage()
+    assert "a,b" in msg  # model context
+    assert "ValueError" in msg  # which exception was being unwound
+    assert records[0].exc_info is not None  # full traceback attached
+
+
+def test_exit_without_caller_exception_propagates_stop_failure(duo, monkeypatch):
+    """The clean-exit path must NOT absorb a shutdown failure — there is
+    no caller exception to protect, so hiding it would lose the error."""
+    reg, _images = duo
+    planner = AutoPlanner(platform=PLAT, mode="best")
+    part = planner.partition(reg.graphs())
+    mm = MultiModelServer(reg, part)
+    real_stop = mm.stop
+
+    def boom(timeout=30.0):
+        raise RuntimeError("shutdown exploded")
+
+    monkeypatch.setattr(mm, "stop", boom)
+    try:
+        with pytest.raises(RuntimeError, match="shutdown exploded"):
+            with mm:
+                pass
+    finally:
+        real_stop()

@@ -1,0 +1,528 @@
+"""Golden equivalence for the unified plan IR (core/plan.py).
+
+PR 7 collapsed four ad-hoc result types and three rank-key conventions
+into one frozen :class:`~repro.core.Plan` and one
+:func:`~repro.core.evaluate` entry point.  The refactor's contract is
+*bit-for-bit* score/selection equality with the pre-IR code paths; this
+module carries frozen reimplementations of the legacy scoring
+(``evaluate_frequencies`` / ``_power_rank_key`` / ``_slo_rank_key`` /
+``partition_objective``, verbatim from the PR 6 tree) and pins the
+unified evaluator against them on the ground-truth AlexNet matrix for
+all three power objectives, both fairness modes, and the SLO floor —
+plus the IR's own contracts (JSON round-trip, legacy conversions, the
+simulator backend, custom objective plug-ins).
+"""
+import itertools
+import json
+import math
+
+import pytest
+
+from repro.core import (
+    Evaluation,
+    MinThroughput,
+    Pipeline,
+    PipelinePlan,
+    Plan,
+    PowerCap,
+    SloP99,
+    TailSlo,
+    assign_frequencies,
+    evaluate,
+    evaluate_frequencies,
+    exhaustive_partition,
+    hikey970,
+    latency_aware_search,
+    max_freqs,
+    partition_objective,
+    partition_search,
+    pipe_it_search,
+    predict_latency,
+    stage_time,
+)
+from repro.core.dse import _candidate_plans
+from repro.core.plan import partition_parts, partition_rank_key
+from repro.core.queueing import md1_wait_quantile
+
+PLAT = hikey970(small_speed=0.36)  # the ground-truth board of benchmarks/
+
+
+@pytest.fixture(scope="module")
+def alex():
+    """Ground-truth AlexNet time matrix + the search's chosen plan."""
+    from benchmarks.common import cnn_descriptors, gt_time_matrix
+
+    T = gt_time_matrix(cnn_descriptors("alexnet"))
+    plan = pipe_it_search(len(T), PLAT, T, mode="best")
+    return T, plan
+
+
+# ---------------------------------------------------------------------------
+# Frozen legacy reference implementations (verbatim PR 6 semantics)
+# ---------------------------------------------------------------------------
+def _legacy_score(plan, T, platform, stage_freqs, power_cap_w=None,
+                  objective="throughput", min_throughput=None,
+                  slo_p99_s=None, arrival_rate=None):
+    """The pre-IR ``evaluate_frequencies`` body, kept verbatim."""
+    times = [
+        stage_time(T, layers, stage) * platform.freq_scale(stage[0], f)
+        for layers, stage, f in zip(
+            plan.allocation, plan.pipeline.stages, stage_freqs
+        )
+    ]
+    cycle = max(max(times), 1e-12)
+    energy = sum(
+        platform.active_power_w(stage[0], stage[1], f) * t
+        for stage, f, t in zip(plan.pipeline.stages, stage_freqs, times)
+    )
+    avg_power = energy / cycle
+    tp = 1.0 / cycle
+    if objective == "throughput_per_watt":
+        score = tp / max(avg_power, 1e-12)
+    elif objective == "min_energy":
+        score = -energy if energy > 0.0 else tp * 1e-15
+    else:
+        score = tp
+    p99 = None
+    if slo_p99_s is not None:
+        p99 = sum(times) + md1_wait_quantile(0.99, arrival_rate, cycle)
+    feasible = (
+        (power_cap_w is None or avg_power <= power_cap_w * (1 + 1e-9))
+        and (min_throughput is None or tp >= min_throughput * (1 - 1e-9))
+        and (p99 is None or p99 <= slo_p99_s * (1 + 1e-9))
+    )
+    return {
+        "throughput": tp,
+        "avg_power_w": avg_power,
+        "energy": energy,
+        "objective": score,
+        "feasible": feasible,
+        "p99_s": p99,
+    }
+
+
+def _legacy_power_rank_key(r, power_cap_w=None):
+    if r["feasible"]:
+        return (2, r["objective"], -r["avg_power_w"])
+    cap_ok = (
+        power_cap_w is None or r["avg_power_w"] <= power_cap_w * (1 + 1e-9)
+    )
+    if cap_ok:
+        return (1, r["throughput"], -r["avg_power_w"])
+    return (0, -r["avg_power_w"], r["objective"])
+
+
+def _legacy_slo_rank_key(pred, throughput, slo_p99_s, headroom):
+    feasible = pred.stable and pred.p99_s <= headroom * slo_p99_s
+    if feasible:
+        return (2, throughput, -pred.p99_s)
+    if pred.stable:
+        return (1, -pred.p99_s, throughput)
+    return (0, -pred.utilization, throughput)
+
+
+def _legacy_partition_parts(throughputs, weights, slo_rates, fairness):
+    ws = list(weights) if weights is not None else [1.0] * len(throughputs)
+    slos = list(slo_rates) if slo_rates is not None else [0.0] * len(throughputs)
+    weighted = [w * tp for w, tp in zip(ws, throughputs)]
+    score = sum(weighted) if fairness == "sum" else min(weighted)
+    shortfall = sum(
+        max(0.0, 1.0 - tp / slo)
+        for tp, slo in zip(throughputs, slos)
+        if slo > 0.0
+    )
+    return score, shortfall
+
+
+def _freq_grid(plan, platform):
+    """Every per-stage OPP combination for ``plan`` (the oracle grid)."""
+    per_stage = [
+        platform.freq_levels(ct) or (None,) for ct, _ in plan.pipeline.stages
+    ]
+    return list(itertools.product(*per_stage))
+
+
+# ---------------------------------------------------------------------------
+# Golden equivalence: power objectives (score, feasibility, rank, argmax)
+# ---------------------------------------------------------------------------
+def _power_scenarios(T, plan):
+    allmax = _legacy_score(plan, T, PLAT, max_freqs(plan, PLAT))
+    cap = 0.55 * PLAT.max_power_w()
+    floor = 0.75 * allmax["throughput"]
+    rate = 0.6 * allmax["throughput"]
+    slo = 3.0 / allmax["throughput"]
+    return [
+        # (objective, cap, floor, slo, rate)
+        ("throughput", None, None, None, None),
+        ("throughput", cap, None, None, None),
+        ("throughput", 0.01, None, None, None),  # cap nobody can meet
+        ("throughput_per_watt", None, None, None, None),
+        ("throughput_per_watt", cap, None, None, None),
+        ("min_energy", None, floor, None, None),
+        ("min_energy", cap, floor, None, None),
+        ("throughput", cap, None, slo, rate),  # SLO folded into DVFS
+    ]
+
+
+def test_golden_power_scoring_bit_for_bit(alex):
+    """Every OPP combo x every scenario: the unified evaluator reproduces
+    the legacy score, feasibility, and rank tuple EXACTLY (no approx)."""
+    T, plan = alex
+    grid = _freq_grid(plan, PLAT)
+    assert len(grid) >= 25  # the plan really has a DVFS space to disagree on
+    for objective, cap, floor, slo, rate in _power_scenarios(T, plan):
+        for combo in grid:
+            legacy = _legacy_score(
+                plan, T, PLAT, combo, cap, objective, floor, slo, rate
+            )
+            got = evaluate_frequencies(
+                plan, T, PLAT, combo, cap, objective, floor, slo, rate
+            )
+            assert got.objective == legacy["objective"]  # bit-for-bit
+            assert got.feasible == legacy["feasible"]
+            assert got.throughput == legacy["throughput"]
+            assert got.avg_power_w == legacy["avg_power_w"]
+            assert got.energy_per_image_j == legacy["energy"]
+            if slo is not None:
+                assert got.p99_s == legacy["p99_s"]
+            assert got.evaluation is not None
+            assert tuple(got.evaluation.rank) == _legacy_power_rank_key(
+                legacy, cap
+            )
+
+
+def test_golden_power_argmax_identical_selection(alex):
+    """The combo the unified rank selects is the SAME one the legacy key
+    selects, for every scenario (first-max tie-breaking included)."""
+    T, plan = alex
+    grid = _freq_grid(plan, PLAT)
+    for objective, cap, floor, slo, rate in _power_scenarios(T, plan):
+        legacy_best = max(
+            range(len(grid)),
+            key=lambda i: _legacy_power_rank_key(
+                _legacy_score(
+                    plan, T, PLAT, grid[i], cap, objective, floor, slo, rate
+                ),
+                cap,
+            ),
+        )
+        new_best = max(
+            range(len(grid)),
+            key=lambda i: evaluate_frequencies(
+                plan, T, PLAT, grid[i], cap, objective, floor, slo, rate
+            ).evaluation.rank,
+        )
+        assert new_best == legacy_best
+        # and the production search lands on the same score
+        searched = assign_frequencies(
+            plan, T, PLAT, cap, objective, floor, slo, rate
+        )
+        oracle = _legacy_score(
+            plan, T, PLAT, grid[legacy_best], cap, objective, floor, slo, rate
+        )
+        if searched.feasible:
+            assert searched.objective >= oracle["objective"] * (1 - 1e-12) \
+                or searched.objective >= oracle["objective"]
+
+
+# ---------------------------------------------------------------------------
+# Golden equivalence: SLO-first ranking (latency_aware_search)
+# ---------------------------------------------------------------------------
+def _slo_candidates(n_layers, T):
+    """The exact candidate list latency_aware_search iterates."""
+    plans = _candidate_plans(n_layers, PLAT, T, "best")
+    seen = {(pl.pipeline.stages, pl.allocation) for pl in plans}
+    all_layers = tuple(range(n_layers))
+    for stage in PLAT.stage_vocabulary():
+        pl = PipelinePlan(Pipeline(stages=(stage,)), (all_layers,))
+        if (pl.pipeline.stages, pl.allocation) not in seen:
+            plans.append(pl)
+    return plans
+
+
+@pytest.mark.parametrize(
+    "rate_frac,slo_factor",
+    [
+        (0.6, 3.0),   # comfortably feasible for several candidates
+        (0.6, 1.001), # nothing fits: stable best-effort path
+        (3.0, 3.0),   # rate above every capacity: unstable path
+    ],
+)
+def test_golden_slo_selection_matches_legacy(alex, rate_frac, slo_factor):
+    T, plan = alex
+    n = len(T)
+    peak = plan.throughput(T)
+    rate = rate_frac * peak
+    slo = slo_factor / peak
+    headroom = 0.9
+    cands = _slo_candidates(n, T)
+    legacy_best = max(
+        cands,
+        key=lambda pl: _legacy_slo_rank_key(
+            predict_latency(pl, T, PLAT, rate), pl.throughput(T), slo, headroom
+        ),
+    )
+    got = latency_aware_search(
+        n, PLAT, T, arrival_rate=rate, slo_p99_s=slo, headroom=headroom
+    )
+    assert got.plan.pipeline.stages == legacy_best.pipeline.stages
+    assert got.plan.allocation == legacy_best.allocation
+    legacy_pred = predict_latency(legacy_best, T, PLAT, rate)
+    assert got.prediction.p99_s == legacy_pred.p99_s
+    assert got.feasible == (
+        legacy_pred.stable and legacy_pred.p99_s <= headroom * slo
+    )
+    assert got.evaluation is not None and got.evaluation.rank == \
+        _legacy_slo_rank_key(legacy_pred, legacy_best.throughput(T), slo, headroom)
+
+
+# ---------------------------------------------------------------------------
+# Golden equivalence: partition fairness modes + SLO floors
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def duo_T():
+    from benchmarks.common import gt_time_matrix, tiny_graph
+
+    Ta = gt_time_matrix(tiny_graph("a", 8).descriptors())
+    Tb = gt_time_matrix(tiny_graph("b", 12).descriptors())
+    return {"a": Ta, "b": Tb}
+
+
+@pytest.mark.parametrize("fairness", ["sum", "max-min"])
+def test_golden_partition_scalar_and_parts(duo_T, fairness):
+    """partition_objective (now a shim over core.plan) reproduces the
+    legacy formula exactly, for both fairness modes, with and without
+    SLO floors."""
+    for tps, ws, slos in [
+        ((10.0, 20.0), (2.0, 1.0), None),
+        ((10.0, 20.0), None, (15.0, 15.0)),
+        ((3.0, 4.0), (1.0, 0.5), (2.0, 8.0)),
+    ]:
+        score, shortfall = _legacy_partition_parts(tps, ws, slos, fairness)
+        assert partition_parts(tps, ws, slos, fairness) == (score, shortfall)
+        assert partition_objective(tps, ws, slos, fairness) == \
+            score - 1e9 * shortfall
+    with pytest.raises(ValueError, match="unknown fairness"):
+        partition_parts((1.0,), None, None, "median")
+
+
+@pytest.mark.parametrize("fairness", ["sum", "max-min"])
+def test_golden_partition_selection_matches_oracle(duo_T, fairness):
+    """Both fairness modes, with an SLO floor that actually shifts
+    capacity: the migrated search still matches the exhaustive oracle
+    (selection) and the legacy scalar (score)."""
+    # floor model "b" at more than a fair share so feasibility binds
+    base = partition_search(duo_T, PLAT, fairness=fairness)
+    slo = {"b": 0.8 * base["b"].throughput * 2.0}
+    got = partition_search(duo_T, PLAT, fairness=fairness, slo_rates=slo)
+    oracle = exhaustive_partition(duo_T, PLAT, fairness=fairness, slo_rates=slo)
+    assert got.feasible == oracle.feasible
+    assert got.objective == pytest.approx(oracle.objective, rel=1e-9)
+    # the reported scalar is exactly the legacy formula over its own tps
+    tps = [got[nm].throughput for nm in got.names]
+    score, shortfall = _legacy_partition_parts(
+        tps, None, [slo.get(nm, 0.0) for nm in got.names], fairness
+    )
+    assert got.objective == score - 1e9 * shortfall
+
+
+def test_partition_rank_key_is_the_legacy_tuple():
+    assert partition_rank_key(5.0, 0.0, True) == (True, -0.0, 5.0)
+    assert partition_rank_key(5.0, 0.3, True) == (False, -0.3, 5.0)
+    assert partition_rank_key(5.0, 0.0, False) == (False, -0.0, 5.0)
+    # ordering: feasible beats any score; then least miss; then score
+    assert partition_rank_key(1.0, 0.0, True) > partition_rank_key(1e12, 0.1, True)
+    assert partition_rank_key(1.0, 0.1, True) > partition_rank_key(1e12, 0.2, True)
+
+
+# ---------------------------------------------------------------------------
+# The IR itself: round-trips, conversions, validation
+# ---------------------------------------------------------------------------
+def test_plan_json_round_trip_all_dimensions():
+    p = Plan(
+        stages=(("B", 4), ("s", 2)),
+        allocation=((0, 1, 2), (3,)),
+        stage_freqs=(2.362e9, None),
+        model="alexnet",
+        share=(("B", 4), ("s", 2)),
+    )
+    back = Plan.from_json(p.to_json())
+    assert back == p
+    assert json.loads(p.to_json())["stage_freqs"] == [2.362e9, None]
+    # minimal plan: optional dimensions stay None through the round trip
+    q = Plan(stages=(("B", 4),), allocation=((0, 1),))
+    assert Plan.from_json(q.to_json()) == q
+    assert q.stage_freqs is None and q.model is None and q.share is None
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError, match="allocation"):
+        Plan(stages=(("B", 4),), allocation=((0,), (1,)))
+    with pytest.raises(ValueError, match="stage_freqs"):
+        Plan(stages=(("B", 4),), allocation=((0, 1),), stage_freqs=(None, None))
+
+
+def test_all_four_legacy_types_convert_to_ir(alex):
+    T, plan = alex
+    # PipelinePlan
+    ir = Plan.from_legacy(plan)
+    assert ir.stages == plan.pipeline.stages
+    assert ir.allocation == plan.allocation
+    assert ir.as_pipeline_plan() == plan
+    # PowerAwarePlan (carries the clocks)
+    pap = assign_frequencies(plan, T, PLAT, power_cap_w=0.55 * PLAT.max_power_w())
+    ir2 = pap.plan_ir()
+    assert ir2.stage_freqs == pap.stage_freqs
+    assert "GHz" in ir2.notation() or "fix" in ir2.notation()
+    # SloPlan (the SLO lives in constraints, not the IR point)
+    sp = latency_aware_search(
+        len(T), PLAT, T,
+        arrival_rate=0.5 * plan.throughput(T),
+        slo_p99_s=5.0 / plan.throughput(T),
+    )
+    ir3 = sp.plan_ir()
+    assert ir3.as_pipeline_plan() == sp.plan
+    # ModelPlan / PartitionPlan (model + share dimensions)
+    from benchmarks.common import gt_time_matrix, tiny_graph
+
+    duo = {
+        "a": gt_time_matrix(tiny_graph("a", 8).descriptors()),
+        "b": gt_time_matrix(tiny_graph("b", 12).descriptors()),
+    }
+    part = partition_search(duo, PLAT)
+    irs = part.plan_irs()
+    assert [p.model for p in irs] == part.names
+    for p in irs:
+        assert p.share is not None
+        assert sum(n for _, n in p.share) >= 1
+    # shares are disjoint and complete (the IR preserves the partition)
+    totals = {}
+    for p in irs:
+        for ct, n in p.share:
+            totals[ct] = totals.get(ct, 0) + n
+    assert totals == {"B": 4, "s": 4}
+
+
+def test_power_plan_reconstructible_from_ir(alex):
+    """IR -> PowerAwarePlan: evaluating the IR's (plan, clocks) point
+    reproduces the original shim field-for-field."""
+    T, plan = alex
+    cap = 0.55 * PLAT.max_power_w()
+    pap = assign_frequencies(plan, T, PLAT, power_cap_w=cap)
+    ir = pap.plan_ir()
+    rebuilt = evaluate_frequencies(
+        ir.as_pipeline_plan(), T, PLAT, ir.stage_freqs, power_cap_w=cap
+    )
+    assert rebuilt.throughput == pap.throughput
+    assert rebuilt.avg_power_w == pap.avg_power_w
+    assert rebuilt.objective == pap.objective
+    assert rebuilt.feasible == pap.feasible
+
+
+def test_evaluate_validation(alex):
+    T, plan = alex
+    ir = Plan.from_legacy(plan)
+    with pytest.raises(ValueError, match="unknown objective"):
+        evaluate(ir, T, PLAT, objective="img_per_fortnight")
+    with pytest.raises(ValueError, match="unknown backend"):
+        evaluate(ir, T, PLAT, backend="vibes")
+    with pytest.raises(ValueError, match="requires arrival_rate"):
+        evaluate(ir, T, PLAT, objective="slo_throughput")
+    with pytest.raises(ValueError, match="arrival_rate"):
+        evaluate(ir, T, PLAT, constraints=(SloP99(0.1),))
+    with pytest.raises(TypeError):
+        Plan.from_legacy(42)
+
+
+def test_constraint_severity_ordering(alex):
+    """A blown cap (severity 0) outranks-down a missed floor (severity 1):
+    the cap is always the binding constraint when both are violated."""
+    T, plan = alex
+    ir = Plan.from_legacy(plan).with_freqs(max_freqs(plan, PLAT))
+    ev = evaluate(
+        ir, T, PLAT,
+        constraints=(MinThroughput(1e9), PowerCap(1e-6)),
+    )
+    assert not ev.feasible
+    assert ev.binding == "power_cap"
+    assert ev.rank[0] == 0
+    ev2 = evaluate(ir, T, PLAT, constraints=(MinThroughput(1e9),))
+    assert ev2.binding == "min_throughput"
+    assert ev2.rank[0] == 1
+    # feasible rank always beats both
+    ev3 = evaluate(ir, T, PLAT)
+    assert ev3.feasible and ev3.rank > ev2.rank > ev.rank
+
+
+def test_custom_objective_callable(alex):
+    """The plug-in contract: any PlanMetrics -> tuple callable ranks."""
+    T, plan = alex
+
+    def min_cycle(m):
+        return (-m.cycle_s,)
+
+    ev = evaluate(Plan.from_legacy(plan), T, PLAT, objective=min_cycle)
+    assert ev.objective_name == "min_cycle"
+    assert ev.score == (-max(plan.stage_times(T)),)
+    assert ev.rank == (2, -max(plan.stage_times(T)))
+
+
+def test_tailslo_unstable_ranks_below_stable(alex):
+    T, plan = alex
+    peak = plan.throughput(T)
+    ir = Plan.from_legacy(plan)
+    stable_over = evaluate(
+        ir, T, PLAT, objective="slo_throughput",
+        constraints=(TailSlo(1e-9, headroom=0.9),), arrival_rate=0.5 * peak,
+    )
+    unstable = evaluate(
+        ir, T, PLAT, objective="slo_throughput",
+        constraints=(TailSlo(1e-9, headroom=0.9),), arrival_rate=2.0 * peak,
+    )
+    assert not stable_over.feasible and not unstable.feasible
+    assert stable_over.rank[0] == 1 and unstable.rank[0] == 0
+    assert stable_over.rank > unstable.rank
+
+
+# ---------------------------------------------------------------------------
+# Simulator-backed evaluation: the ground-truth path shares the machinery
+# ---------------------------------------------------------------------------
+def test_simulate_backend_cross_checks_model(alex):
+    T, plan = alex
+    ir = Plan.from_legacy(plan).with_freqs(max_freqs(plan, PLAT))
+    model = evaluate(ir, T, PLAT)
+    sim = evaluate(ir, T, PLAT, backend="simulate", n_images=128)
+    assert sim.metrics.backend == "simulate"
+    # Eq. 12 steady state: the simulator confirms the analytic throughput
+    assert sim.metrics.throughput == pytest.approx(model.metrics.throughput, rel=0.02)
+    assert sim.metrics.avg_power_w == pytest.approx(model.metrics.avg_power_w, rel=0.10)
+    # constraints run on SIMULATED metrics through the same code path
+    capped = evaluate(
+        ir, T, PLAT, backend="simulate", n_images=128,
+        constraints=(PowerCap(1e-6),),
+    )
+    assert not capped.feasible and capped.binding == "power_cap"
+
+
+def test_simulate_backend_open_loop_p99(alex):
+    from repro.serving import poisson_trace
+
+    T, plan = alex
+    peak = plan.throughput(T)
+    trace = poisson_trace(0.6 * peak, n=300, seed=3)
+    ir = Plan.from_legacy(plan)
+    sim = evaluate(
+        ir, T, PLAT, backend="simulate", arrival_s=trace.times,
+        arrival_rate=0.6 * peak,
+    )
+    assert sim.metrics.p99_s is not None and sim.metrics.p99_s > 0.0
+    # the model's p99 bounds the simulated one within the pinned band
+    pred = predict_latency(plan, T, PLAT, 0.6 * peak)
+    assert sim.metrics.p99_s == pytest.approx(pred.p99_s, rel=0.35)
+    # a TailSlo constraint consumes the measured tail
+    tight = evaluate(
+        ir, T, PLAT, backend="simulate", arrival_s=trace.times,
+        objective="slo_throughput",
+        constraints=(TailSlo(sim.metrics.p99_s * 0.5),),
+    )
+    assert not tight.feasible and tight.binding == "tail_slo"
