@@ -1,0 +1,478 @@
+"""Fault-recovery benchmark: deterministic chaos for the serving stack.
+
+Four scenario families; every acceptance criterion of the fault-tolerance
+layer is asserted here (deterministically — the fault schedules are
+seeded ``FaultPlan``s keyed to per-stage invocation ordinals, so reruns
+reproduce bit-for-bit):
+
+* ``live_recovery`` — a real ``PipelineServer`` on a tiny CNN survives
+  each stage-fault class (worker crash, transient errors, a silent stall
+  past the watchdog deadline, and a seeded mix).  Asserts **zero lost and
+  zero duplicated outputs** vs. the fault-free baseline (count + value
+  allclose), that every injected fault actually fired, that the recovery
+  counters (retries, re-dispatches, restarts, stall detections, MTTR)
+  account for it, and that stalls are detected within the heartbeat
+  deadline plus one watchdog poll period.
+* ``cluster_loss_sim`` — simulator-measured degraded-mode re-planning:
+  ``AdaptiveController.degrade`` re-runs the DSE on the surviving
+  ``HeteroPlatform.subset`` after losing big cores; the degraded plan's
+  measured throughput must be **>= 90% of the exhaustive-search oracle**
+  for the degraded platform, and ``rejoin`` must restore **>= 95% of the
+  pre-fault throughput** (it restores the exact pre-fault plan, so the
+  ratio is 1.0).  Also replays a seeded fault schedule through
+  ``simulate(faults=...)`` twice and asserts identical finish times with
+  no image lost.
+* ``live_cluster_loss`` — the same degrade/rejoin protocol end-to-end on
+  a live server via ``AdaptiveMonitor``: epoch hot-swap onto the
+  surviving-cores plan mid-stream, rejoin restores the original plan,
+  and no ticket is ever dropped or duplicated.
+* ``multimodel_recovery`` — a two-model ``MultiModelServer`` with
+  model-scoped fault schedules (each model's injector only sees its own
+  events); both models' outputs stay complete and correct.
+
+Live scenarios always run the 16x16 tiny CNNs (they exercise threading
+and recovery paths, not kernel scale); ``--tiny`` additionally keeps the
+simulator scenario on the tiny time matrix instead of AlexNet's.
+
+Run: ``PYTHONPATH=src:. python -m benchmarks.fault_recovery [--tiny]``
+Emits BENCH_faults.json (BENCH_faults_tiny.json with --tiny).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (
+    PLAT,
+    cnn_descriptors,
+    fmt_row,
+    gt_time_matrix,
+    tiny_graph,
+    write_bench_json,
+)
+from repro.core import exhaustive_search, partition_search, pipe_it_search
+from repro.core.simulator import simulate
+from repro.serving import (
+    AdaptiveController,
+    FaultEvent,
+    FaultPlan,
+    ModelRegistry,
+    MultiModelServer,
+    PipelineServer,
+    RecoveryPolicy,
+    SingleStageEngine,
+    attach_adaptive,
+    build_stage_fns,
+    fault_injecting_builder,
+)
+
+N_IMAGES = 24  # per live run; at_call ordinals below stay well inside this
+
+#: Live recovery policy: small backoffs so a scenario finishes in
+#: seconds, a watchdog deadline comfortably above the tiny CNN's stage
+#: time (~1 ms) but far below the injected stall.
+POLICY = RecoveryPolicy(
+    max_retries=3,
+    backoff_base_s=0.002,
+    backoff_factor=2.0,
+    heartbeat_deadline_s=0.25,
+    restart_delay_s=0.0,
+    max_restarts=8,
+)
+STALL_S = 1.5  # > heartbeat_deadline_s: only the watchdog can catch it
+
+
+def _images(n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return [
+        jnp.asarray(rng.standard_normal((1, 16, 16, 3)), jnp.float32)
+        for _ in range(n)
+    ]
+
+
+def _assert_outputs_match(name, ref, outputs):
+    assert len(outputs) == len(ref), (
+        f"{name}: {len(ref) - len(outputs)} outputs lost "
+        f"({len(outputs)}/{len(ref)} returned)"
+    )
+    for i, (a, b) in enumerate(zip(ref, outputs)):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5,
+            err_msg=f"{name}: output {i} diverged from fault-free baseline",
+        )
+
+
+# --------------------------------------------------------------- scenario 1
+def live_recovery():
+    """Every stage-fault class against a live server; zero loss/dup."""
+    g = tiny_graph("faulty", 8)
+    params = g.init(jax.random.PRNGKey(0))
+    images = _images(N_IMAGES)
+    T = gt_time_matrix(g.descriptors())
+    plan = pipe_it_search(len(T), PLAT, T, mode="best")
+    n_stages = plan.pipeline.p
+
+    # Fault-free baseline: the truth every faulty run must reproduce.
+    # batch_size=1/flush 0 makes invocation ordinals == image indices,
+    # so each FaultEvent lands on a known image deterministically.
+    with PipelineServer(g, params, plan, batch_size=1,
+                        flush_timeout_s=0.0) as srv:
+        base = srv.run(images)
+    ref = base["outputs"]
+    eng = SingleStageEngine(g, params)
+    eng.warmup(images[0])
+    _assert_outputs_match(
+        "baseline", eng.run(images)["outputs"], ref
+    )
+
+    last = n_stages - 1
+    cases = [
+        ("crash", FaultPlan(events=(
+            FaultEvent("crash", stage=0, at_call=2),
+            FaultEvent("crash", stage=last, at_call=5),
+        ))),
+        ("transient", FaultPlan(events=(
+            FaultEvent("transient", stage=0, at_call=1, count=2),
+            FaultEvent("transient", stage=last, at_call=4,
+                       count=POLICY.max_retries + 1),  # escalates to restart
+        ))),
+        ("stall", FaultPlan(events=(
+            FaultEvent("stall", stage=0, at_call=3, stall_s=STALL_S),
+        ))),
+        ("seeded_mix", FaultPlan.seeded(
+            17, n_stages=n_stages, n_events=5, max_call=N_IMAGES - 4,
+            stall_s=STALL_S,
+        )),
+    ]
+
+    records, rows = [], []
+    base_tp = base["throughput"]
+    for name, fplan in cases:
+        inj = fplan.injector(POLICY)
+        srv = PipelineServer(
+            g, params, plan, batch_size=1, flush_timeout_s=0.0,
+            stage_fn_builder=fault_injecting_builder(build_stage_fns, inj),
+            recovery=POLICY,
+        )
+        t0 = time.perf_counter()
+        with srv:
+            res = srv.run(images)
+        wall = time.perf_counter() - t0
+        snap = srv.metrics.recovery.snapshot()
+
+        _assert_outputs_match(name, ref, res["outputs"])
+        scheduled = len(fplan.stage_events())
+        assert inj.total_fired >= scheduled, (
+            f"{name}: only {inj.total_fired}/{scheduled} scheduled events "
+            f"fired (ordinals never reached?)"
+        )
+        fired = inj.fired_kinds()
+        if fired.get("transient"):
+            # every fired transient is consumed by an in-place retry OR by
+            # the attempt that escalates past max_retries into a restart
+            accounted = snap["transient_retries"] + snap["worker_restarts"]
+            assert accounted >= fired["transient"], (
+                f"{name}: {fired['transient']} transients fired but only "
+                f"{snap['transient_retries']} retries + "
+                f"{snap['worker_restarts']} restarts recorded"
+            )
+        if fired.get("crash"):
+            assert snap["worker_restarts"] >= fired["crash"], (
+                f"{name}: {fired['crash']} crashes fired but only "
+                f"{snap['worker_restarts']} restarts"
+            )
+            assert snap["redispatched"] >= 1, (
+                f"{name}: crash fired but nothing was re-dispatched"
+            )
+        if fired.get("stall"):
+            # only the watchdog can see a silent stall; detection latency
+            # (heartbeat age at the verdict) must stay within deadline +
+            # one poll period (+ scheduling slack)
+            deadline = POLICY.heartbeat_deadline_s
+            period = min(max(deadline / 4.0, 0.002), 0.25)
+            assert snap["stalls_detected"] >= fired["stall"], (
+                f"{name}: {fired['stall']} stalls fired, watchdog saw "
+                f"{snap['stalls_detected']}"
+            )
+            assert snap["last_stall_age_s"] <= deadline + period + 0.25, (
+                f"{name}: stall detected at age {snap['last_stall_age_s']:.3f}s, "
+                f"deadline {deadline}s + poll {period}s"
+            )
+        if snap["recoveries"]:
+            assert snap["mttr_s"] > 0.0
+
+        records.append({
+            "scenario": "live_recovery", "case": name,
+            "events_fired": inj.total_fired,
+            "fired_kinds": fired,
+            "throughput": res["throughput"],
+            "throughput_vs_fault_free": res["throughput"] / base_tp,
+            "wall_s": wall,
+            "recovery": snap,
+            "fault_plan": fplan.to_dict(),
+        })
+        rows.append(fmt_row(
+            f"faults/live_{name}", 1e6 * wall / len(images),
+            f"fired={inj.total_fired} restarts={snap['worker_restarts']} "
+            f"retries={snap['transient_retries']} mttr={snap['mttr_s'] * 1e3:.1f}ms",
+        ))
+    return records, rows
+
+
+# --------------------------------------------------------------- scenario 2
+def cluster_loss_sim(tiny: bool):
+    """Degraded-mode re-planning, measured in the simulator."""
+    if tiny:
+        descs = tiny_graph("t", 8).descriptors()
+    else:
+        descs = cnn_descriptors("alexnet")
+    T = gt_time_matrix(descs)
+    n = len(T)
+    plan = pipe_it_search(n, PLAT, T, mode="best")
+    n_img = 100 if tiny else 200
+    pre = simulate(plan, T, PLAT, n_images=n_img)
+
+    records, rows = [], []
+    # lose the whole big cluster, then only half of it
+    for label, lost in (("lose_B4", {"B": 4}), ("lose_B2", {"B": 2})):
+        ctrl = AdaptiveController(prior=T, plan=plan, platform=PLAT)
+        deg_plan = ctrl.degrade(lost)
+        surviving = {
+            ct.name: ct.count - lost.get(ct.name, 0)
+            for ct in PLAT.core_types
+        }
+        sub = PLAT.subset({k: v for k, v in surviving.items() if v > 0})
+        oracle = exhaustive_search(n, sub, T)
+        deg = simulate(deg_plan, T, sub, n_images=n_img)
+        orc = simulate(oracle, T, sub, n_images=n_img)
+        ratio = deg.steady_throughput / orc.steady_throughput
+        assert ratio >= 0.90, (
+            f"{label}: degraded plan {deg_plan.pipeline.notation()} reaches "
+            f"{ratio:.3f} of the degraded-platform oracle "
+            f"{oracle.pipeline.notation()} (want >= 0.90)"
+        )
+        restored = ctrl.rejoin()
+        post = simulate(restored, T, PLAT, n_images=n_img)
+        rj = post.steady_throughput / pre.steady_throughput
+        assert rj >= 0.95, (
+            f"{label}: rejoin restores only {rj:.3f} of pre-fault "
+            f"throughput (want >= 0.95)"
+        )
+        assert restored == plan, f"{label}: rejoin did not restore the plan"
+        records.append({
+            "scenario": "cluster_loss_sim", "case": label, "lost": lost,
+            "pre_tp": pre.steady_throughput,
+            "degraded_tp": deg.steady_throughput,
+            "oracle_tp": orc.steady_throughput,
+            "vs_oracle": ratio,
+            "rejoin_tp": post.steady_throughput,
+            "vs_pre_fault": rj,
+            "degraded_plan": deg_plan.pipeline.notation(),
+            "oracle_plan": oracle.pipeline.notation(),
+        })
+        rows.append(fmt_row(
+            f"faults/sim_{label}", 1e6 / deg.steady_throughput,
+            f"vs_oracle={ratio:.3f} rejoin={rj:.3f}",
+        ))
+
+    # seeded schedule through simulate(faults=...): bit-for-bit replay,
+    # no image lost, downtime strictly accounted
+    fplan = FaultPlan.seeded(29, n_stages=plan.pipeline.p, n_events=6,
+                             max_call=n_img // 2, stall_s=0.02)
+    runs = [simulate(plan, T, PLAT, n_images=n_img, faults=fplan)
+            for _ in range(2)]
+    a, b = runs
+    assert a.finish_times == b.finish_times, (
+        "simulate(faults=...) is not reproducible across runs"
+    )
+    assert len(a.finish_times) == n_img, "simulator lost images under faults"
+    assert a.fault_events > 0 and a.fault_delay_s > 0.0
+    assert a.makespan_s > pre.makespan_s  # faults only ever delay
+    records.append({
+        "scenario": "cluster_loss_sim", "case": "sim_fault_replay",
+        "fault_events": a.fault_events,
+        "fault_delay_s": a.fault_delay_s,
+        "makespan_s": a.makespan_s,
+        "fault_free_makespan_s": pre.makespan_s,
+        "fault_plan": fplan.to_dict(),
+    })
+    rows.append(fmt_row(
+        "faults/sim_replay", 1e6 * a.fault_delay_s,
+        f"events={a.fault_events} identical_replays=2",
+    ))
+    return records, rows
+
+
+# --------------------------------------------------------------- scenario 3
+def live_cluster_loss():
+    """Degrade + rejoin hot-swaps on a live server, zero loss."""
+    g = tiny_graph("degrade", 8)
+    params = g.init(jax.random.PRNGKey(0))
+    images = _images(N_IMAGES, seed=1)
+    T = gt_time_matrix(g.descriptors())
+    plan = pipe_it_search(len(T), PLAT, T, mode="best")
+
+    eng = SingleStageEngine(g, params)
+    eng.warmup(images[0])
+    ref = eng.run(images)["outputs"]
+
+    srv = PipelineServer(g, params, plan, batch_size=1, flush_timeout_s=0.0,
+                         recovery=POLICY)
+    outputs = []
+    t0 = time.perf_counter()
+    with srv:
+        monitor = attach_adaptive(srv, T, PLAT, start=False)
+        third = len(images) // 3
+        outputs += [t.result(timeout=60.0)
+                    for t in [srv.submit(x) for x in images[:third]]]
+
+        deg_plan = monitor.degrade({"B": 4})  # epoch hot-swap mid-stream
+        assert srv.plan == deg_plan and monitor.controller.degraded
+        assert all(ct == "s" for ct, _ in deg_plan.pipeline.stages), (
+            f"degraded plan still uses big cores: {deg_plan}"
+        )
+        epoch_degraded = srv.epoch
+        outputs += [t.result(timeout=60.0)
+                    for t in [srv.submit(x) for x in images[third:2 * third]]]
+
+        restored = monitor.rejoin()
+        assert restored == plan and srv.plan == plan
+        assert srv.epoch > epoch_degraded >= 1
+        outputs += [t.result(timeout=60.0)
+                    for t in [srv.submit(x) for x in images[2 * third:]]]
+    wall = time.perf_counter() - t0
+
+    _assert_outputs_match("live_cluster_loss", ref, outputs)
+    records = [{
+        "scenario": "live_cluster_loss",
+        "degraded_plan": deg_plan.pipeline.notation(),
+        "restored_plan": restored.pipeline.notation(),
+        "epochs": srv.epoch,
+        "images": len(images),
+        "wall_s": wall,
+    }]
+    rows = [fmt_row(
+        "faults/live_degrade_rejoin", 1e6 * wall / len(images),
+        f"epochs={srv.epoch} degraded={deg_plan.pipeline.notation()}",
+    )]
+    return records, rows
+
+
+# --------------------------------------------------------------- scenario 4
+def multimodel_recovery():
+    """Model-scoped fault schedules on a two-model co-serving setup."""
+    ga, gb = tiny_graph("a", 8), tiny_graph("b", 12)
+    reg = ModelRegistry()
+    reg.add("a", ga, weight=2.0)
+    reg.add("b", gb)
+    images = _images(N_IMAGES, seed=2)
+    Ts = {n: gt_time_matrix(reg[n].graph.descriptors()) for n in reg.names}
+    part = partition_search(Ts, PLAT)
+
+    refs = {}
+    for name in reg.names:
+        eng = SingleStageEngine(reg[name].graph, reg[name].params)
+        eng.warmup(images[0])
+        refs[name] = eng.run(images)["outputs"]
+
+    fplan = FaultPlan(events=(
+        FaultEvent("crash", stage=0, at_call=1, model="a"),
+        FaultEvent("transient", stage=0, at_call=3, count=2, model="b"),
+        FaultEvent("stall", stage=0, at_call=6, stall_s=STALL_S, model="a"),
+    ))
+    injectors = {n: fplan.injector(POLICY, model=n) for n in reg.names}
+    builders = {
+        n: fault_injecting_builder(build_stage_fns, injectors[n])
+        for n in reg.names
+    }
+    mm = MultiModelServer(reg, part, batch_size=1, flush_timeout_s=0.0,
+                          stage_fn_builders=builders, recovery=POLICY)
+    t0 = time.perf_counter()
+    tickets = {n: [] for n in reg.names}
+    try:
+        mm.start()
+        for img in images:  # interleaved round-robin over both models
+            for name in reg.names:
+                tickets[name].append(mm.submit(name, img))
+        outputs = {
+            n: [t.result(timeout=120.0) for t in ts]
+            for n, ts in tickets.items()
+        }
+    finally:
+        mm.stop()
+    wall = time.perf_counter() - t0
+
+    snaps = {}
+    for name in reg.names:
+        _assert_outputs_match(f"multimodel[{name}]", refs[name], outputs[name])
+        scheduled = len(fplan.stage_events(model=name))
+        assert injectors[name].total_fired >= scheduled, (
+            f"model {name}: only {injectors[name].total_fired}/{scheduled} "
+            f"scoped events fired"
+        )
+        snaps[name] = mm.server(name).metrics.recovery.snapshot()
+    assert snaps["a"]["worker_restarts"] >= 1  # crash + detected stall
+    assert snaps["a"]["stalls_detected"] >= 1
+    assert snaps["b"]["transient_retries"] >= 2
+    # scoping: b's injector must never have fired a's events
+    assert "crash" not in injectors["b"].fired_kinds()
+
+    records = [{
+        "scenario": "multimodel_recovery",
+        "partition": {n: part.plans()[n].pipeline.notation()
+                      for n in reg.names},
+        "images_per_model": len(images),
+        "wall_s": wall,
+        "recovery": snaps,
+        "fault_plan": fplan.to_dict(),
+    }]
+    rows = [fmt_row(
+        "faults/multimodel", 1e6 * wall / (2 * len(images)),
+        f"a_restarts={snaps['a']['worker_restarts']} "
+        f"b_retries={snaps['b']['transient_retries']}",
+    )]
+    return records, rows
+
+
+# --------------------------------------------------------------------- main
+def run(tiny=False):
+    all_records, all_rows = [], []
+    for fn in (live_recovery,
+               lambda: cluster_loss_sim(tiny),
+               live_cluster_loss,
+               multimodel_recovery):
+        records, rows = fn()
+        all_records += records
+        all_rows += rows
+    write_bench_json(
+        "BENCH_faults_tiny.json" if tiny else "BENCH_faults.json",
+        {
+            "platform": PLAT.name,
+            "policy": {
+                "max_retries": POLICY.max_retries,
+                "backoff_base_s": POLICY.backoff_base_s,
+                "heartbeat_deadline_s": POLICY.heartbeat_deadline_s,
+            },
+            "records": all_records,
+        },
+    )
+    return all_rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="tiny time matrix for the simulator scenario too "
+                         "(live scenarios always use the 16x16 CNNs)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(tiny=args.tiny):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,7 @@ from . import (
     ablation_dse,
     adaptive_replan,
     eq12_design_space,
+    fault_recovery,
     fig3_kernel_level,
     fig5_disproportionate,
     fig6_conv_share,
@@ -51,6 +52,7 @@ MODULES = [
     adaptive_replan,
     power_aware,
     tail_latency,
+    fault_recovery,
     kernels_bench,
     tpu_pipeit_bench,
     roofline_report,

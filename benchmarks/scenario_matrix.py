@@ -27,6 +27,7 @@ import os
 import sys
 
 from repro.core import (
+    Availability,
     MinThroughput,
     Plan,
     PowerCap,
@@ -132,14 +133,43 @@ def _slo_cells(workload, T):
     return cells
 
 
+def _degraded_cells(workload, T):
+    """The availability axis (serving's degraded mode): the whole big
+    cluster is lost.  One cell re-plans on the survivors and must stay
+    feasible under the IR's ``Availability`` constraint; one re-scores
+    the stale full-platform plan under the same constraint and must pin
+    the infeasible (severity-0 safety) ordering."""
+    survivors = PLAT.subset({"s": 4})
+    avail = Availability.from_platform(survivors)
+    replanned = pipe_it_search(len(T), survivors, T, mode="best")
+    stale = pipe_it_search(len(T), PLAT, T, mode="best")
+    return [
+        (
+            {"workload": workload, "objective": "throughput",
+             "cap_frac": None, "slo": None, "degraded": "loseB_replanned"},
+            evaluate(replanned, T, survivors, constraints=(avail,)),
+        ),
+        (
+            {"workload": workload, "objective": "throughput",
+             "cap_frac": None, "slo": None, "degraded": "loseB_stale_plan"},
+            evaluate(stale, T, PLAT, constraints=(avail,)),
+        ),
+    ]
+
+
 def _cell_key(cell):
     slo = cell["slo"]
-    return "|".join([
+    key = "|".join([
         cell["workload"],
         cell["objective"],
         "uncapped" if cell["cap_frac"] is None else f"cap{cell['cap_frac']}",
         "noslo" if slo is None else f"slo{slo['factor']}@{slo['rate_frac']}",
     ])
+    # availability cells are suffix-keyed so every pre-existing cell's
+    # key stays byte-identical (the committed baseline ratchets on them)
+    if cell.get("degraded"):
+        key += f"|{cell['degraded']}"
+    return key
 
 
 def run_matrix(tiny: bool):
@@ -147,6 +177,7 @@ def run_matrix(tiny: bool):
     for workload, T in sorted(_workloads(tiny).items()):
         cells = _power_cells(workload, T)
         cells.extend(_slo_cells(workload, T))
+        cells.extend(_degraded_cells(workload, T))
         for cell, ev in cells:
             m = ev.metrics
             sim = evaluate(

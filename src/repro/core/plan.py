@@ -240,6 +240,10 @@ class PlanMetrics:
     p99_s: Optional[float] = None  # end-to-end p99 (None: latency-blind)
     prediction: Optional[LatencyPrediction] = None
     backend: str = "model"
+    # The plan's stage shapes ((core_type, n_cores) per stage) — what
+    # placement-sensitive constraints (:class:`Availability`) check.
+    # None only for hand-built metrics that predate the field.
+    stages: Optional[Tuple[StageConfig, ...]] = None
 
     @property
     def stable(self) -> bool:
@@ -397,6 +401,50 @@ class TailSlo:
         return (0, (-m.utilization, m.throughput))
 
 
+@dataclasses.dataclass(frozen=True)
+class Availability:
+    """The plan must fit on the cores that are still alive.
+
+    The degraded-mode constraint (serving/faults.py): after a permanent
+    core/cluster loss, ``alive`` holds the surviving per-core-type
+    counts, and any plan whose stages demand more cores of a type than
+    survive cannot execute at all — a *safety* failure (severity 0, like
+    :class:`PowerCap`).  Violators rank by fewest dead cores demanded
+    (closest to schedulable), then by score.  Build from the surviving
+    sub-platform with :meth:`from_platform` (the same
+    ``HeteroPlatform.subset`` the degraded re-plan searches over).
+    """
+
+    alive: Tuple[Tuple[str, int], ...]
+    name: str = dataclasses.field(default="availability", repr=False)
+
+    @classmethod
+    def from_platform(cls, platform: HeteroPlatform) -> "Availability":
+        return cls(
+            alive=tuple((ct.name, ct.count) for ct in platform.core_types)
+        )
+
+    def violation(
+        self, m: PlanMetrics, score: Tuple[float, ...]
+    ) -> Optional[Violation]:
+        if m.stages is None:
+            raise ValueError(
+                "Availability needs PlanMetrics.stages — score the plan "
+                "through evaluate(), which records stage shapes"
+            )
+        demand: Dict[str, int] = {}
+        for core_type, n in m.stages:
+            demand[core_type] = demand.get(core_type, 0) + n
+        alive = dict(self.alive)
+        missing = sum(
+            max(0, n - alive.get(core_type, 0))
+            for core_type, n in demand.items()
+        )
+        if missing == 0:
+            return None
+        return (0, (-float(missing), score[0]))
+
+
 # ----------------------------------------------------------------- evaluator
 @dataclasses.dataclass(frozen=True)
 class Evaluation:
@@ -498,6 +546,7 @@ def evaluate(
             p99_s=p99,
             prediction=prediction,
             backend="model",
+            stages=tuple(plan.stages),
         )
     elif backend == "simulate":
         res = simulate(
@@ -520,6 +569,7 @@ def evaluate(
             p99_s=res.latency_p99_s if arrival_s is not None else None,
             prediction=None,
             backend="simulate",
+            stages=tuple(plan.stages),
         )
     else:
         raise ValueError(f"unknown backend {backend!r}; 'model' or 'simulate'")

@@ -76,6 +76,11 @@ class SimResult:
     # next simulation window (``simulate(initial_free=...)``) so windowed
     # control loops see backlogs survive across control decisions.
     stage_free_s: List[float] = dataclasses.field(default_factory=list)
+    # Fault injection accounting (``simulate(faults=...)``): scheduled
+    # events that fired and the total downtime (backoffs, restarts,
+    # stalls) they added on top of useful service time.
+    fault_events: int = 0
+    fault_delay_s: float = 0.0
 
 
 def simulate(
@@ -88,6 +93,7 @@ def simulate(
     arrival_s: Optional[Sequence[float]] = None,
     initial_free: Optional[Sequence[float]] = None,
     admit: Optional[Callable[[float, float], bool]] = None,
+    faults=None,
 ) -> SimResult:
     """Simulate ``n_images`` flowing through the pipeline.
 
@@ -112,6 +118,17 @@ def simulate(
     ``admit(arrival_time, predicted_wait_s)`` is consulted per arrival;
     returning False sheds the image (counted in ``SimResult.shed``) —
     the hook the queue-aware admission controller plugs into.
+
+    ``faults`` injects a deterministic fault schedule: a
+    ``serving.faults.FaultPlan`` (or a pre-built ``FaultInjector`` —
+    duck-typed on ``.injector()``/``.sim_delay()`` so ``core`` never
+    imports the serving package).  Each stage invocation consults the
+    injector and pays the recovery delay its policy implies (retry
+    backoffs, restart + re-dispatch, stall detection) — the same
+    per-stage invocation ordinals the live wrapped stage fns consume,
+    so a scenario reproduces identically in both worlds.  No image is
+    ever lost: faults only delay; ``SimResult.fault_events`` /
+    ``fault_delay_s`` account for them.
     """
     p = plan.pipeline.p
     service = plan.stage_times(T)
@@ -160,6 +177,12 @@ def simulate(
     latencies: List[float] = []
     busy = [0.0] * p
     shed = 0
+    # Duck-typed fault schedule: FaultPlan grows a fresh injector per
+    # run; a caller-built injector is used as-is (shared counters).
+    inj = None
+    if faults is not None:
+        inj = faults.injector() if hasattr(faults, "injector") else faults
+    fault_delay = 0.0
 
     for a in arrivals:
         if admit is not None and not admit(a, max(stage_free[0] - a, 0.0)):
@@ -167,9 +190,14 @@ def simulate(
             continue
         t = a
         for i in range(p):
+            extra = inj.sim_delay(i) if inj is not None else 0.0
             start = max(t, stage_free[i])
-            end = start + service[i]
+            # Injected downtime (retries, restart + re-dispatch, stalls)
+            # extends this image's occupancy of the stage but is not
+            # useful busy time (occupancy/energy stay service-based).
+            end = start + service[i] + extra
             busy[i] += service[i]
+            fault_delay += extra
             stage_free[i] = end
             t = end + (transfer[i] if i < p - 1 else 0.0)
         finish.append(t)
@@ -197,4 +225,6 @@ def simulate(
         latency_p99_s=empirical_percentile(latencies, 99.0),
         shed=shed,
         stage_free_s=list(stage_free),
+        fault_events=inj.total_fired if inj is not None else 0,
+        fault_delay_s=fault_delay,
     )

@@ -51,6 +51,15 @@ from .adaptive import (
     run_adaptive_loop,
 )
 from .batching import MicroBatch, gather, split_rows, stack_envs
+from .faults import (
+    FaultEvent,
+    FaultInjector,
+    FaultPlan,
+    RecoveryPolicy,
+    TransientStageError,
+    WorkerCrash,
+    fault_injecting_builder,
+)
 from .engine import (
     PipelinedGraphEngine,
     SingleStageEngine,
@@ -81,6 +90,7 @@ from .multimodel import (
     PartitionEvent,
     attach_partition_adaptive,
 )
+from .persistence import PlanStore
 from .planner import AutoPlanner, host_platform, serve
 from .registry import ModelEntry, ModelRegistry
 from .server import (
@@ -101,6 +111,14 @@ __all__ = [
     "DriftDetector",
     "DriftingMatrix",
     "DvfsGovernor",
+    "FaultEvent",
+    "FaultInjector",
+    "FaultPlan",
+    "PlanStore",
+    "RecoveryPolicy",
+    "TransientStageError",
+    "WorkerCrash",
+    "fault_injecting_builder",
     "attach_governor",
     "governed_stage_fn_builder",
     "run_governed_loop",

@@ -70,6 +70,7 @@ from ..core.dse import (
     power_aware_search,
 )
 from ..core.pipeline import PipelinePlan, TimeMatrix, stage_time
+from ..core.plan import Availability, evaluate
 from ..core.platform import HeteroPlatform, StageConfig
 from ..core.simulator import SimulatedClock, simulate
 from .engine import build_stage_fns
@@ -265,6 +266,120 @@ class AdaptiveController:
         # Bounded: an oscillating environment re-plans forever and a
         # persistent server must not grow memory with uptime.
         self.history: Deque[ReplanEvent] = collections.deque(maxlen=256)
+        # Degraded-mode state (serving/faults.py cluster loss): the full
+        # machine, the per-core-type losses currently in effect, and the
+        # plan to restore on rejoin.  ``platform`` always reflects what
+        # the DSE may use — the surviving subset while degraded.
+        self.full_platform = platform
+        self.lost: Dict[str, int] = {}
+        self._pre_degrade: Optional[
+            Tuple[PipelinePlan, Optional[PowerAwarePlan]]
+        ] = None
+
+    @property
+    def degraded(self) -> bool:
+        return self._pre_degrade is not None
+
+    def degrade(self, lost: Dict[str, int]) -> PipelinePlan:
+        """Permanent core loss: re-plan on the surviving sub-platform.
+
+        ``lost`` maps core-type name -> cores just lost (cumulative with
+        any earlier loss).  Re-runs the full DSE on the calibrated matrix
+        restricted to ``full_platform.subset(surviving)`` and returns the
+        degraded plan — validated against the IR's :class:`Availability`
+        constraint so a plan demanding dead cores can never be adopted.
+        No min-gain gate: like :meth:`replan_under_cap`, the old plan may
+        simply be unschedulable, and availability beats hysteresis."""
+        merged = dict(self.lost)
+        for core_type, n in lost.items():
+            if n < 0:
+                raise ValueError(f"lost {n} {core_type!r} cores < 0")
+            merged[core_type] = merged.get(core_type, 0) + n
+        surviving = {
+            ct.name: ct.count - merged.get(ct.name, 0)
+            for ct in self.full_platform.core_types
+        }
+        for core_type, n in merged.items():
+            if not any(ct.name == core_type for ct in self.full_platform.core_types):
+                raise ValueError(f"unknown core type {core_type!r}")
+        degraded = self.full_platform.subset(
+            {k: v for k, v in surviving.items() if v > 0}
+        )
+        if self._pre_degrade is None:
+            self._pre_degrade = (self.plan, self.power_plan)
+        self.lost = merged
+        self.platform = degraded
+        T_new = self.calibrator.matrix()
+        self.T_planned = T_new
+        self.detector.reset()
+        if self.power_aware:
+            candidate = power_aware_search(
+                self.calibrator.n_layers, degraded, T_new, mode=self.mode,
+                power_cap_w=self.power_cap_w, objective=self.objective,
+                min_throughput=self.min_throughput,
+                slo_p99_s=self._slo_budget(), arrival_rate=self._slo_rate(),
+            )
+            new_plan = candidate.plan
+            self.power_plan = candidate
+        else:
+            new_plan = pipe_it_search(
+                self.calibrator.n_layers, degraded, T_new, mode=self.mode
+            )
+        verdict = evaluate(
+            new_plan, T_new, degraded,
+            constraints=(Availability.from_platform(degraded),),
+        )
+        if verdict.binding == "availability":
+            raise RuntimeError(
+                f"degraded re-plan still demands lost cores: {new_plan}"
+            )
+        old = self.plan
+        self.history.append(
+            ReplanEvent(
+                round=self.rounds,
+                deviation=0.0,  # not drift-triggered: the machine shrank
+                old_plan=old,
+                new_plan=new_plan,
+                predicted_gain=new_plan.throughput(T_new)
+                / max(old.throughput(T_new), 1e-12),
+                swapped=new_plan != old,
+            )
+        )
+        if new_plan != old:
+            self.swaps += 1
+        self.plan = new_plan
+        return new_plan
+
+    def rejoin(self) -> PipelinePlan:
+        """Lost cores came back: restore the remembered pre-fault plan
+        (the ISSUE's contract — rejoin returns to the original operating
+        point; drift since then re-triggers the normal loop)."""
+        if self._pre_degrade is None:
+            raise ValueError("rejoin() without a preceding degrade()")
+        plan, power_plan = self._pre_degrade
+        self._pre_degrade = None
+        self.lost = {}
+        self.platform = self.full_platform
+        T_new = self.calibrator.matrix()
+        self.T_planned = T_new
+        self.detector.reset()
+        old = self.plan
+        self.history.append(
+            ReplanEvent(
+                round=self.rounds,
+                deviation=0.0,
+                old_plan=old,
+                new_plan=plan,
+                predicted_gain=plan.throughput(T_new)
+                / max(old.throughput(T_new), 1e-12),
+                swapped=plan != old,
+            )
+        )
+        if plan != old:
+            self.swaps += 1
+        self.plan = plan
+        self.power_plan = power_plan
+        return plan
 
     @property
     def power_aware(self) -> bool:
@@ -577,6 +692,38 @@ class AdaptiveMonitor:
         if self.governor is not None and self.controller.power_plan is not None:
             self.governor.apply(self.controller.power_plan)
         return new_plan
+
+    def _degraded_transition(self, transition) -> PipelinePlan:
+        """Run a controller degrade/rejoin and hot-swap the result; on ANY
+        failure (search or swap) restore the whole controller belief —
+        plan, platform, loss state, history — so the controller keeps
+        describing what actually runs.  The same revert-on-swap-failure
+        idiom as :meth:`step` / the governor's throttle."""
+        c = self.controller
+        snap = (
+            c.plan, c.swaps, c.power_plan, c.platform, dict(c.lost),
+            c._pre_degrade, list(c.history),
+        )
+        try:
+            new_plan = transition()
+            if new_plan != self.server.plan:
+                self.server.swap_plan(new_plan)
+        except BaseException:
+            (c.plan, c.swaps, c.power_plan, c.platform, c.lost,
+             c._pre_degrade, history) = snap
+            c.history = collections.deque(history, maxlen=c.history.maxlen)
+            raise
+        if self.governor is not None and c.power_plan is not None:
+            self.governor.apply(c.power_plan)
+        return new_plan
+
+    def degrade(self, lost: Dict[str, int]) -> PipelinePlan:
+        """Cluster/core loss detected: re-plan on the survivors and swap."""
+        return self._degraded_transition(lambda: self.controller.degrade(lost))
+
+    def rejoin(self) -> PipelinePlan:
+        """Lost cores returned: restore the pre-fault plan and swap."""
+        return self._degraded_transition(self.controller.rejoin)
 
     def _loop(self) -> None:
         while not self._stop.wait(self.interval_s):

@@ -119,6 +119,103 @@ class StageMetrics:
         }
 
 
+class RecoveryMetrics:
+    """Fault-tolerance accounting for one server (all epochs).
+
+    Populated only when the server runs with a
+    :class:`~repro.serving.faults.RecoveryPolicy`; all counters stay zero
+    under the fail-fast default.  Counters are lifetime-monotone (they
+    survive ``new_epoch`` — availability is a property of the server, not
+    of one plan).  MTTR is measured per recovery episode: from the moment
+    a fault is detected (worker death, watchdog stall verdict) to the
+    re-dispatched work's safe hand-off downstream.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.transient_retries = 0  # in-place retries of TransientStageError
+        self.redispatched = 0  # tickets re-executed on a restarted stage
+        self.worker_restarts = 0  # stage workers respawned (crash or stall)
+        self.stalls_detected = 0  # watchdog verdicts
+        self.duplicates_suppressed = 0  # late zombie rows deduped at egress
+        self.faults = 0  # recovery episodes entered
+        self.faults_by_kind: Dict[str, int] = {}
+        self.last_fault_s: Optional[float] = None  # perf_counter stamps
+        self.last_recovery_s: Optional[float] = None
+        self.last_stall_age_s: Optional[float] = None  # detection latency
+        self.heartbeat_age_s: Dict[int, float] = {}  # stage -> current age
+        self._mttr_total = 0.0
+        self._recoveries = 0
+
+    # ------------------------------------------------------------- writers
+    def note_retry(self, stage: int) -> None:
+        with self._lock:
+            self.transient_retries += 1
+
+    def note_fault(self, stage: int, kind: str) -> None:
+        with self._lock:
+            self.faults += 1
+            self.faults_by_kind[kind] = self.faults_by_kind.get(kind, 0) + 1
+            self.last_fault_s = time.perf_counter()
+
+    def note_restart(self, stage: int) -> None:
+        with self._lock:
+            self.worker_restarts += 1
+
+    def note_stall(self, stage: int, age_s: float) -> None:
+        with self._lock:
+            self.stalls_detected += 1
+            self.last_stall_age_s = age_s
+
+    def note_redispatch(self, n_tickets: int) -> None:
+        with self._lock:
+            self.redispatched += int(n_tickets)
+
+    def note_duplicate(self, n: int = 1) -> None:
+        with self._lock:
+            self.duplicates_suppressed += int(n)
+
+    def note_recovered(self, mttr_s: float) -> None:
+        with self._lock:
+            self._mttr_total += mttr_s
+            self._recoveries += 1
+            self.last_recovery_s = time.perf_counter()
+
+    def set_heartbeat_ages(self, ages: Dict[int, float]) -> None:
+        with self._lock:
+            self.heartbeat_age_s = dict(ages)
+
+    # ------------------------------------------------------------- readers
+    @property
+    def recoveries(self) -> int:
+        with self._lock:
+            return self._recoveries
+
+    @property
+    def mttr_s(self) -> float:
+        """Mean time to recover over completed episodes (0.0 when none)."""
+        with self._lock:
+            return self._mttr_total / self._recoveries if self._recoveries else 0.0
+
+    def snapshot(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "faults": self.faults,
+                "faults_by_kind": dict(self.faults_by_kind),
+                "transient_retries": self.transient_retries,
+                "worker_restarts": self.worker_restarts,
+                "redispatched": self.redispatched,
+                "stalls_detected": self.stalls_detected,
+                "duplicates_suppressed": self.duplicates_suppressed,
+                "recoveries": self._recoveries,
+                "mttr_s": (
+                    self._mttr_total / self._recoveries if self._recoveries else 0.0
+                ),
+                "last_stall_age_s": self.last_stall_age_s,
+                "heartbeat_age_s": dict(self.heartbeat_age_s),
+            }
+
+
 class ServerMetrics:
     """Aggregates stage metrics plus end-to-end request accounting.
 
@@ -137,6 +234,10 @@ class ServerMetrics:
 
     def __init__(self, stage_names: List[str]):
         self.stages = [StageMetrics(name=n) for n in stage_names]
+        # Fault-recovery counters persist across epochs (like the e2e
+        # stream counters): a restart during epoch 3 is still part of the
+        # server's availability story in epoch 4.
+        self.recovery = RecoveryMetrics()
         self.epoch = 0
         self.stage_history: Deque[List[Dict[str, Any]]] = collections.deque(
             maxlen=EPOCH_HISTORY
@@ -207,6 +308,7 @@ class ServerMetrics:
             "queue_wait_p95_s": percentile(qwait, 95),
             "queue_wait_p99_s": percentile(qwait, 99),
             "stages": [s.snapshot() for s in self.stages],
+            "recovery": self.recovery.snapshot(),
         }
 
 

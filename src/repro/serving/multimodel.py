@@ -50,6 +50,7 @@ from ..core.dse import (
     partition_search,
 )
 from ..core.pipeline import TimeMatrix
+from ..core.plan import Availability, evaluate
 from ..core.platform import HeteroPlatform
 from .adaptive import (
     AdaptiveConfig,
@@ -58,6 +59,7 @@ from .adaptive import (
     ServerSampler,
     StageObservation,
 )
+from .faults import RecoveryPolicy
 from .metrics import RouterMetrics
 from .registry import ModelRegistry
 from .server import (
@@ -122,6 +124,7 @@ class MultiModelServer:
         backend=None,
         tuner=None,
         fairness: str = "sum",
+        recovery: Optional[RecoveryPolicy] = None,
     ):
         missing = [n for n in partition.names if n not in registry]
         if missing:
@@ -158,6 +161,7 @@ class MultiModelServer:
                 n: max_inflight.get(n) for n in partition.names
             }
         builders = dict(stage_fn_builders or {})
+        self.recovery = recovery
         self.servers: Dict[str, PipelineServer] = {}
         for mp in partition.assignments:
             entry = registry[mp.name]
@@ -171,9 +175,13 @@ class MultiModelServer:
                 stage_fn_builder=builders.get(mp.name),
                 backend=backend,
                 name=f"mm-{mp.name}",
+                recovery=recovery,
             )
         self.router = RouterMetrics(partition.names)
         self.monitor: Optional["MultiModelMonitor"] = None
+        # Last-known-good persistence (serving/persistence.py): set by
+        # ``serve(plan_store=...)``; saved after every successful swap.
+        self.plan_store = None
         self.partition_epoch = 0
         self._swap_lock = threading.Lock()
         # Admission bookkeeping: the router counts its own admitted
@@ -409,7 +417,22 @@ class MultiModelServer:
                 raise
             self.partition = partition
             self.partition_epoch += 1
+        self._persist_partition()
         return self
+
+    def _persist_partition(self) -> None:
+        """Save the running partition as last-known-good (best effort: a
+        persistence error must never fail serving — it is logged)."""
+        store = self.plan_store
+        if store is None:
+            return
+        try:
+            store.save_server(self)
+        except Exception:  # noqa: BLE001 — persistence is best-effort
+            logger.exception(
+                "multi-model server: last-known-good partition persistence "
+                "failed (serving continues)"
+            )
 
     # -------------------------------------------------------------- metrics
     @property
@@ -511,6 +534,104 @@ class PartitionController:
         self.rounds = 0
         self.swaps = 0
         self.history: Deque[PartitionEvent] = collections.deque(maxlen=256)
+        # Degraded-mode state (cluster loss): mirrors the single-model
+        # AdaptiveController — ``platform`` is what the partition DSE may
+        # carve up, the surviving subset while degraded.
+        self.full_platform = platform
+        self.lost: Dict[str, int] = {}
+        self._pre_degrade: Optional[PartitionPlan] = None
+
+    @property
+    def degraded(self) -> bool:
+        return self._pre_degrade is not None
+
+    def degrade(self, lost: Mapping[str, int]) -> PartitionPlan:
+        """Permanent core loss: re-partition every model onto the
+        survivors (``full_platform.subset``), no gain gate — the old
+        shares may overlap the dead cluster and simply cannot run.  Each
+        model's new plan is validated against the IR's ``Availability``
+        constraint on its own share."""
+        merged = dict(self.lost)
+        for core_type, n in lost.items():
+            if n < 0:
+                raise ValueError(f"lost {n} {core_type!r} cores < 0")
+            if not any(
+                ct.name == core_type for ct in self.full_platform.core_types
+            ):
+                raise ValueError(f"unknown core type {core_type!r}")
+            merged[core_type] = merged.get(core_type, 0) + n
+        surviving = {
+            ct.name: ct.count - merged.get(ct.name, 0)
+            for ct in self.full_platform.core_types
+        }
+        degraded = self.full_platform.subset(
+            {k: v for k, v in surviving.items() if v > 0}
+        )
+        if self._pre_degrade is None:
+            self._pre_degrade = self.partition
+        self.lost = merged
+        self.platform = degraded
+        Ts = {n: self.calibrators[n].matrix() for n in self.partition.names}
+        self.T_planned = Ts
+        for det in self.detectors.values():
+            det.reset()
+        candidate = self._search(Ts)
+        for mp in candidate.assignments:
+            verdict = evaluate(
+                mp.plan, Ts[mp.name], mp.share,
+                constraints=(Availability.from_platform(mp.share),),
+            )
+            if verdict.binding == "availability":
+                raise RuntimeError(
+                    f"degraded re-partition gave {mp.name!r} lost cores: "
+                    f"{mp.plan}"
+                )
+        swapped = candidate.plans() != self.partition.plans()
+        self.history.append(
+            PartitionEvent(
+                round=self.rounds,
+                triggered_by=("degrade",),
+                old_partition=self.partition,
+                new_partition=candidate,
+                predicted_gain=candidate.objective
+                / max(abs(self._objective_of(self.partition, Ts)), 1e-12),
+                swapped=swapped,
+            )
+        )
+        self.partition = candidate
+        if swapped:
+            self.swaps += 1
+        return candidate
+
+    def rejoin(self) -> PartitionPlan:
+        """Lost cores came back: restore the remembered pre-fault
+        partition (drift since then re-triggers the normal loop)."""
+        if self._pre_degrade is None:
+            raise ValueError("rejoin() without a preceding degrade()")
+        restored = self._pre_degrade
+        self._pre_degrade = None
+        self.lost = {}
+        self.platform = self.full_platform
+        Ts = {n: self.calibrators[n].matrix() for n in self.partition.names}
+        self.T_planned = Ts
+        for det in self.detectors.values():
+            det.reset()
+        swapped = restored.plans() != self.partition.plans()
+        self.history.append(
+            PartitionEvent(
+                round=self.rounds,
+                triggered_by=("rejoin",),
+                old_partition=self.partition,
+                new_partition=restored,
+                predicted_gain=restored.objective
+                / max(abs(self._objective_of(self.partition, Ts)), 1e-12),
+                swapped=swapped,
+            )
+        )
+        self.partition = restored
+        if swapped:
+            self.swaps += 1
+        return restored
 
     def _objective_of(
         self, partition: PartitionPlan, Ts: Mapping[str, TimeMatrix]
@@ -705,6 +826,35 @@ class MultiModelMonitor:
                 )
             raise
         return new_partition
+
+    def _degraded_transition(self, transition) -> PartitionPlan:
+        """Run a controller degrade/rejoin and hot-swap the result; on ANY
+        failure (search or swap) restore the whole controller belief so it
+        keeps describing what actually runs.  ``swap_partition`` is
+        all-or-nothing, so after a failed swap the servers still run
+        ``snap``'s partition."""
+        c = self.controller
+        snap = (
+            c.partition, c.swaps, c.platform, dict(c.lost), c._pre_degrade,
+            list(c.history),
+        )
+        try:
+            new_partition = transition()
+            self.mserver.swap_partition(new_partition)
+        except BaseException:
+            (c.partition, c.swaps, c.platform, c.lost, c._pre_degrade,
+             history) = snap
+            c.history = collections.deque(history, maxlen=c.history.maxlen)
+            raise
+        return new_partition
+
+    def degrade(self, lost: Mapping[str, int]) -> PartitionPlan:
+        """Cluster/core loss: re-partition onto the survivors and swap."""
+        return self._degraded_transition(lambda: self.controller.degrade(lost))
+
+    def rejoin(self) -> PartitionPlan:
+        """Lost cores returned: restore the pre-fault partition and swap."""
+        return self._degraded_transition(self.controller.rejoin)
 
     def _loop(self) -> None:
         while not self._stop.wait(self.interval_s):

@@ -191,18 +191,26 @@ class AutoPlanner:
         fairness: str = "sum",
         power_cap_w: Optional[float] = None,
         power_objective: str = "throughput",
+        partition: Optional[PartitionPlan] = None,
+        recovery=None,
     ) -> MultiModelServer:
         """Partition the platform across the registry's models and
-        construct a (warmed, started) :class:`MultiModelServer`."""
-        partition = self.partition(
-            registry.graphs(),
-            time_matrices,
-            weights=registry.weights(),
-            slo_rates=registry.slo_rates(),
-            fairness=fairness,
-            power_cap_w=power_cap_w,
-            power_objective=power_objective,
-        )
+        construct a (warmed, started) :class:`MultiModelServer`.
+
+        ``partition`` overrides the two-level DSE (the ``resume_from``
+        warm-start path hands a persisted partition in here); ``recovery``
+        arms every inner pipeline's fault-recovery layer
+        (:class:`~repro.serving.faults.RecoveryPolicy`)."""
+        if partition is None:
+            partition = self.partition(
+                registry.graphs(),
+                time_matrices,
+                weights=registry.weights(),
+                slo_rates=registry.slo_rates(),
+                fairness=fairness,
+                power_cap_w=power_cap_w,
+                power_objective=power_objective,
+            )
         mserver = MultiModelServer(
             registry,
             partition,
@@ -214,6 +222,7 @@ class AutoPlanner:
             backend=self.backend,
             tuner=self.tuner,
             fairness=fairness,
+            recovery=recovery,
         )
         if warmup:
             mserver.warmup()
@@ -232,11 +241,15 @@ class AutoPlanner:
         warmup: bool = True,
         stage_fn_builder=None,
         plan: Optional[PipelinePlan] = None,
+        recovery=None,
     ) -> PipelineServer:
         """Plan the pipeline and construct a (warmed, started) server.
 
         ``plan`` overrides the DSE (the power-aware path plans once via
-        :meth:`power_plan` and hands the resulting allocation in here)."""
+        :meth:`power_plan` and hands the resulting allocation in here,
+        and ``serve(resume_from=)`` a persisted one); ``recovery`` arms
+        the fault-recovery layer
+        (:class:`~repro.serving.faults.RecoveryPolicy`)."""
         if params is None:
             params = graph.init(jax.random.PRNGKey(seed))
         if plan is None:
@@ -250,6 +263,7 @@ class AutoPlanner:
             queue_depth=queue_depth,
             stage_fn_builder=stage_fn_builder,
             backend=self.backend,
+            recovery=recovery,
         )
         if warmup:
             server.warmup()
@@ -280,8 +294,23 @@ def serve(
     power_cap_w: Optional[float] = None,
     power_objective: str = "throughput",
     min_throughput: Optional[float] = None,
+    recovery=None,
+    plan_store=None,
+    resume_from=None,
 ) -> PipelineServer:
     """One call from model name (or Graph) to a running PipelineServer.
+
+    **Fault tolerance** (serving/faults.py): ``recovery`` — a
+    :class:`~repro.serving.faults.RecoveryPolicy` — arms worker-crash
+    restart, transient-error retry with backoff, at-least-once ticket
+    re-dispatch, and the stall watchdog on the server (or on every inner
+    pipeline of a multi-model deployment).  ``plan_store`` (a path or
+    :class:`~repro.serving.persistence.PlanStore`) persists the active
+    plan as last-known-good JSON on startup and after every successful
+    hot-swap; ``resume_from`` (same types, typically the same path)
+    restores a persisted plan/partition on restart and SKIPS the cold
+    calibrate + DSE path — absent or unusable files fall back to a
+    normal cold start.
 
     **Power-aware serving**: ``power_cap_w`` (watts of modeled average
     active power on the planning platform) and/or
@@ -333,6 +362,7 @@ def serve(
     >>> mm.stop()
     """
     from ..kernels.backend import measure_graph_routes, resolve_backend
+    from .persistence import PlanStore
 
     if isinstance(model, (Mapping, ModelRegistry)):
         if min_throughput is not None:
@@ -361,6 +391,9 @@ def serve(
             fairness=fairness if fairness is not None else "sum",
             power_cap_w=power_cap_w,
             power_objective=power_objective,
+            recovery=recovery,
+            plan_store=plan_store,
+            resume_from=resume_from,
         )
     if max_inflight is not None or fairness is not None:
         raise ValueError(
@@ -389,7 +422,14 @@ def serve(
         measured=measured,
         tuner=tuner,
     )
-    T = planner.time_matrix(graph) if time_matrix is None else time_matrix
+    # Warm start: a persisted last-known-good plan skips the cold
+    # calibrate + DSE path entirely (best effort — an absent or unusable
+    # store falls back to a normal cold start).
+    resume_plan = None
+    if resume_from is not None:
+        ir = PlanStore.coerce(resume_from).load_plan()
+        if ir is not None:
+            resume_plan = ir.as_pipeline_plan()
     # min_throughput alone also arms the power path: the floor is enforced
     # as DVFS-feasibility, never silently dropped
     power_aware = (
@@ -397,6 +437,18 @@ def serve(
         or power_objective != "throughput"
         or min_throughput is not None
     )
+    # The time matrix is only built when something still needs it: the
+    # DSE (no resume), the power-aware frequency search, or the adaptive
+    # loop's prior.  A resumed fixed-clock static server skips it.
+    need_T = (
+        time_matrix is not None
+        or resume_plan is None
+        or power_aware
+        or adaptive
+    )
+    T = None
+    if need_T:
+        T = planner.time_matrix(graph) if time_matrix is None else time_matrix
     pplan = None
     if power_aware:
         pplan = planner.power_plan(
@@ -413,7 +465,12 @@ def serve(
         seed=seed,
         warmup=warmup,
         stage_fn_builder=stage_fn_builder,
-        plan=pplan.plan if pplan is not None else None,
+        plan=(
+            pplan.plan if pplan is not None
+            else resume_plan if resume_plan is not None
+            else None
+        ),
+        recovery=recovery,
     )
     if power_aware:
         # the governor owns the clocks; its monitor thread only runs when
@@ -437,6 +494,11 @@ def serve(
             mode=mode,
             config=adaptive_config,
         )
+    if plan_store is not None:
+        # After governor attachment so the persisted plan carries the
+        # assigned clocks; the startup plan is the first known-good.
+        server.plan_store = PlanStore.coerce(plan_store)
+        server._persist_plan()
     return server
 
 
@@ -461,6 +523,9 @@ def _serve_multi(
     fairness: str,
     power_cap_w: Optional[float] = None,
     power_objective: str = "throughput",
+    recovery=None,
+    plan_store=None,
+    resume_from=None,
 ) -> MultiModelServer:
     """The multi-model arm of :func:`serve`.
 
@@ -472,6 +537,7 @@ def _serve_multi(
     the same measured truth.
     """
     from ..kernels.backend import measure_graph_routes, resolve_backend
+    from .persistence import PlanStore
 
     if len(registry) == 0:
         raise ValueError("serve() got an empty model registry")
@@ -495,8 +561,23 @@ def _serve_multi(
         measured=measured,
         tuner=tuner,
     )
+    # Warm start: a persisted last-known-good partition skips the cold
+    # calibrate + two-level DSE path (best effort).
+    resume_partition = None
+    if resume_from is not None:
+        resume_partition = PlanStore.coerce(resume_from).load_partition(
+            planner.platform
+        )
+        if resume_partition is not None and sorted(
+            resume_partition.names
+        ) != sorted(e.name for e in registry):
+            resume_partition = None  # the model zoo changed: cold start
+    # Time matrices are only built when something still needs them: the
+    # partition DSE (no resume) or the adaptive loop's priors.
+    Ts = None
     if time_matrix is None:
-        Ts = planner.time_matrices(registry.graphs())
+        if resume_partition is None or adaptive:
+            Ts = planner.time_matrices(registry.graphs())
     elif isinstance(time_matrix, Mapping):
         Ts = {e.name: time_matrix[e.name] for e in registry}
     else:
@@ -520,6 +601,8 @@ def _serve_multi(
         fairness=fairness,
         power_cap_w=power_cap_w,
         power_objective=power_objective,
+        partition=resume_partition,
+        recovery=recovery,
     )
     if adaptive:
         attach_partition_adaptive(
@@ -531,4 +614,7 @@ def _serve_multi(
             power_cap_w=power_cap_w,
             power_objective=power_objective,
         )
+    if plan_store is not None:
+        mserver.plan_store = PlanStore.coerce(plan_store)
+        mserver._persist_partition()
     return mserver

@@ -43,6 +43,7 @@ from ..cnn.graph import Graph
 from ..core.pipeline import PipelinePlan
 from .batching import MicroBatch, gather, split_rows, stack_envs
 from .engine import build_stage_fns
+from .faults import RecoveryPolicy, TransientStageError
 from .metrics import ServerMetrics
 
 _SENTINEL = object()
@@ -168,6 +169,29 @@ class PipelineServer:
         or a resolved ``repro.kernels.backend.KernelBackend``).  Resolved
         once and reused across plan swaps; ignored when a custom
         ``stage_fn_builder`` is injected.
+    recovery : optional :class:`repro.serving.faults.RecoveryPolicy`.
+        ``None`` (default) keeps the historical fail-fast contract: any
+        worker error closes the server and fails every in-flight ticket.
+        With a policy, the server self-heals instead:
+
+        * **transient errors** (:class:`TransientStageError`) retry in
+          place with exponential backoff, escalating to a restart after
+          ``max_retries``;
+        * **worker crashes** restart the stage (a fresh generation) and
+          *re-dispatch* the in-flight micro-batch to it — at-least-once
+          execution, safe because stage fns are pure functions of
+          ``(params, batch)``; the egress worker dedupes by the
+          already-resolved :class:`Ticket` (monotone ``Ticket.id``), so
+          clients still see each output exactly once;
+        * **silent stalls** are converted into detected failures by a
+          heartbeat watchdog within ``heartbeat_deadline_s`` — the
+          wedged thread is abandoned (it exits on wake, its late result
+          discarded as stale) and a replacement re-dispatches;
+        * recovery counters (retries, re-dispatches, restarts, MTTR,
+          heartbeat ages) live in ``metrics.recovery``.
+
+        ``max_restarts`` bounds self-healing per stage per epoch; past
+        it the server falls back to fail-fast.
     """
 
     def __init__(
@@ -182,6 +206,7 @@ class PipelineServer:
         stage_fn_builder=None,
         backend=None,
         name: str = "pipe",
+        recovery: Optional[RecoveryPolicy] = None,
     ):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
@@ -213,6 +238,24 @@ class PipelineServer:
         self._threads: List[threading.Thread] = []
         self._inflight: set = set()
         self._epoch = 0
+        self.recovery = recovery
+        # Optional PlanStore (serving/persistence.py): the last-known-good
+        # plan is saved after every successful swap (and on attach).
+        self.plan_store = None
+        # Worker generation tokens: each spawned/restarted stage worker
+        # gets a unique monotone generation; a superseded ("zombie")
+        # worker notices its token is stale and exits without forwarding,
+        # so a stalled thread abandoned by the watchdog can never corrupt
+        # the stream its replacement re-dispatched.
+        self._gen_seq = itertools.count(1)
+        self._stage_gen: List[int] = []
+        self._processing: List[Optional[Any]] = []  # in-flight work, per stage
+        self._busy_since: List[Optional[float]] = []  # heartbeat timestamps
+        self._fault_at: List[Optional[float]] = []  # MTTR episode starts
+        self._restarts: List[int] = []
+        self._abandoned: List[threading.Thread] = []  # watchdog-shot zombies
+        self._watchdog: Optional[threading.Thread] = None
+        self._watchdog_stop = threading.Event()
         # Optional adaptive-control attachment (serving/adaptive.py); when
         # set, stop() shuts it down before draining the pipeline.
         self.monitor = None
@@ -231,6 +274,7 @@ class PipelineServer:
         self._started = False
         self._closed = False
         self._error: Optional[BaseException] = None
+        self._reset_recovery_state(n)
 
     # ------------------------------------------------------------ lifecycle
     @staticmethod
@@ -249,19 +293,43 @@ class PipelineServer:
         with self._lock:
             return len(self._inflight)
 
+    def _reset_recovery_state(self, n: int) -> None:
+        """Fresh per-stage recovery bookkeeping for ``n`` stages (epoch
+        boundary or construction).  Generation 0 means 'no live worker';
+        real generations (from ``_gen_seq``) start at 1."""
+        with self._lock:
+            self._stage_gen = [0] * n
+            self._processing = [None] * n
+            self._busy_since = [None] * n
+            self._fault_at = [None] * n
+            self._restarts = [0] * n
+
     def _spawn_workers(self) -> None:
+        # Idempotent: spawning while the current epoch's workers are
+        # still alive would create a rival consumer set racing on the
+        # same queues (and a set stop()'s single sentinel can never
+        # reach), so a redundant call is a no-op.  Epoch swaps and
+        # per-stage recovery drain/bump generations first, so they are
+        # never suppressed by this guard.
+        if any(t.is_alive() for t in self._threads):
+            return
         n = len(self._stage_fns)
         e = self._epoch
         tag = self.name
+        self._reset_recovery_state(n)
+        with self._lock:
+            gens = [next(self._gen_seq) for _ in range(n)]
+            self._stage_gen = gens
         self._threads = [
             threading.Thread(
-                target=self._stage0_worker, name=f"{tag}-e{e}-stage0", daemon=True
+                target=self._stage0_worker, args=(gens[0],),
+                name=f"{tag}-e{e}-stage0", daemon=True,
             )
         ]
         for i in range(1, n):
             self._threads.append(
                 threading.Thread(
-                    target=self._stage_worker, args=(i,),
+                    target=self._stage_worker, args=(i, gens[i]),
                     name=f"{tag}-e{e}-stage{i}", daemon=True,
                 )
             )
@@ -272,6 +340,197 @@ class PipelineServer:
         )
         for t in self._threads:
             t.start()
+        self._start_watchdog()
+
+    # ------------------------------------------------------------- recovery
+    def _gen_current(self, si: int, gen: int) -> bool:
+        with self._lock:
+            return si < len(self._stage_gen) and self._stage_gen[si] == gen
+
+    def _mark_busy(self, si: int, gen: int) -> None:
+        with self._lock:
+            if si < len(self._stage_gen) and self._stage_gen[si] == gen:
+                self._busy_since[si] = time.perf_counter()
+
+    def _mark_idle(self, si: int, gen: int) -> None:
+        with self._lock:
+            if si < len(self._stage_gen) and self._stage_gen[si] == gen:
+                self._busy_since[si] = None
+
+    def _set_processing(self, si: int, gen: int, item: Any) -> None:
+        with self._lock:
+            if si < len(self._stage_gen) and self._stage_gen[si] == gen:
+                self._processing[si] = item
+
+    def _take_redispatch(self, si: int, gen: int) -> Optional[Any]:
+        """A replacement worker claims its predecessor's in-flight work.
+        The slot stays set until the item is safely forwarded
+        (``_clear_processing``), so a crash *during* re-dispatch hands the
+        same item to the next replacement — at-least-once."""
+        with self._lock:
+            if si < len(self._stage_gen) and self._stage_gen[si] == gen:
+                return self._processing[si]
+        return None
+
+    def _clear_processing(self, si: int, gen: int) -> None:
+        recovered = None
+        with self._lock:
+            if si < len(self._stage_gen) and self._stage_gen[si] == gen:
+                self._processing[si] = None
+                if self._fault_at[si] is not None:
+                    recovered = time.perf_counter() - self._fault_at[si]
+                    self._fault_at[si] = None
+        if recovered is not None:
+            self.metrics.recovery.note_recovered(recovered)
+
+    def _execute(self, si: int, gen: int, fn, env):
+        """Run one stage invocation with the transient-retry loop.
+
+        :class:`TransientStageError` retries in place with exponential
+        backoff up to ``recovery.max_retries``, then escalates (re-raise
+        -> worker restart + re-dispatch).  ``_busy_since`` brackets the
+        call so the watchdog sees a heartbeat per invocation."""
+        policy = self.recovery
+        attempt = 0
+        while True:
+            self._mark_busy(si, gen)
+            try:
+                out = fn(self.params, env)
+                jax.block_until_ready(out)
+                return out
+            except TransientStageError:
+                attempt += 1
+                if policy is None or attempt > policy.max_retries:
+                    raise
+                self.metrics.recovery.note_retry(si)
+                time.sleep(policy.backoff_s(attempt))
+            finally:
+                self._mark_idle(si, gen)
+
+    def _on_worker_failure(self, si: int, gen: int, error: BaseException) -> None:
+        """A stage worker's loop died.  Fail-fast without a recovery
+        policy (historical semantics); otherwise restart the stage and
+        re-dispatch its in-flight work.  Superseded generations exit
+        silently — their failure already belongs to a restarted past."""
+        with self._lock:
+            stale = not (si < len(self._stage_gen) and self._stage_gen[si] == gen)
+            closed = self._closed
+        if stale:
+            logger.info(
+                "server %r: superseded stage-%d worker exited with %r (ignored)",
+                self.name, si, error,
+            )
+            return
+        if self.recovery is None or closed:
+            self._fail(error)
+            return
+        self._recover_stage(si, gen, error, stalled=False)
+
+    def _recover_stage(
+        self,
+        si: int,
+        gen: int,
+        error: BaseException,
+        *,
+        stalled: bool,
+        old_thread: Optional[threading.Thread] = None,
+    ) -> None:
+        """Bump the stage's generation and spawn a replacement worker.
+
+        Called from a dying worker (crash / escalated transient) or from
+        the watchdog (stall).  The generation check under the lock makes
+        concurrent callers race safely: exactly one restarts, the loser
+        sees a stale token and returns."""
+        policy = self.recovery
+        with self._lock:
+            if not (si < len(self._stage_gen) and self._stage_gen[si] == gen):
+                return  # already recovered by a concurrent path
+            if self._closed:
+                return
+            exhausted = self._restarts[si] >= policy.max_restarts
+            if not exhausted:
+                self._restarts[si] += 1
+                restart_no = self._restarts[si]
+                newgen = next(self._gen_seq)
+                self._stage_gen[si] = newgen
+                self._busy_since[si] = None
+                if self._fault_at[si] is None:
+                    self._fault_at[si] = time.perf_counter()
+        if exhausted:
+            exc = ServingError(
+                f"stage {si}: max_restarts ({policy.max_restarts}) exhausted"
+            )
+            exc.__cause__ = error
+            self._fail(exc)
+            return
+        rec = self.metrics.recovery
+        rec.note_fault(si, "stall" if stalled else type(error).__name__)
+        rec.note_restart(si)
+        logger.warning(
+            "server %r (epoch %d): stage %d worker %s (%r) — restarting "
+            "(restart %d/%d, generation %d)",
+            self.name, self._epoch, si,
+            "stalled" if stalled else "failed", error,
+            restart_no, policy.max_restarts, newgen,
+        )
+        if stalled and old_thread is not None:
+            # The wedged thread stays alive until its stage fn returns; it
+            # will notice the stale generation and exit without forwarding.
+            self._abandoned.append(old_thread)
+        if policy.restart_delay_s > 0:
+            time.sleep(policy.restart_delay_s)
+        if si == 0:
+            target, args = self._stage0_worker, (newgen,)
+        else:
+            target, args = self._stage_worker, (si, newgen)
+        t = threading.Thread(
+            target=target, args=args,
+            name=f"{self.name}-e{self._epoch}-stage{si}-r{restart_no}",
+            daemon=True,
+        )
+        self._threads[si] = t  # stop()/swap join the replacement, not the corpse
+        t.start()
+
+    def _start_watchdog(self) -> None:
+        if self.recovery is None or self._watchdog is not None:
+            return
+        t = threading.Thread(
+            target=self._watchdog_loop, name=f"{self.name}-watchdog", daemon=True
+        )
+        self._watchdog = t
+        t.start()
+
+    def _watchdog_loop(self) -> None:
+        """Convert silent stalls into detected failures: a stage busy on
+        ONE invocation for longer than ``heartbeat_deadline_s`` is
+        declared stalled and restarted (its thread abandoned)."""
+        deadline = self.recovery.heartbeat_deadline_s
+        period = min(max(deadline / 4.0, 0.002), 0.25)
+        while not self._watchdog_stop.wait(period):
+            with self._lock:
+                if self._closed:
+                    return
+                now = time.perf_counter()
+                snap = list(zip(self._busy_since, self._stage_gen))
+            ages: Dict[int, float] = {}
+            stalled = []
+            for si, (busy, gen) in enumerate(snap):
+                age = 0.0 if busy is None else now - busy
+                ages[si] = age
+                if busy is not None and age > deadline:
+                    stalled.append((si, gen, age))
+            self.metrics.recovery.set_heartbeat_ages(ages)
+            for si, gen, age in stalled:
+                old = self._threads[si] if si < len(self._threads) else None
+                self.metrics.recovery.note_stall(si, age)
+                self._recover_stage(
+                    si, gen,
+                    ServingError(
+                        f"stage {si} stalled: heartbeat age {age:.3f}s > "
+                        f"watchdog deadline {deadline:.3f}s"
+                    ),
+                    stalled=True, old_thread=old,
+                )
 
     def start(self) -> "PipelineServer":
         # _submit_lock spans the _started publish AND the spawn: a
@@ -336,15 +595,45 @@ class PipelineServer:
                         raise ServerClosed("server is closed") from self._error
                     started = self._started
                 if started:
-                    # 3. drain the old epoch completely
-                    self._ingress.put(_SENTINEL)
-                    for t in self._threads:
-                        t.join(timeout=timeout)
-                    if any(t.is_alive() for t in self._threads):
+                    # 3. drain the old epoch completely — under a deadline:
+                    # a wedged stage 0 leaves the ingress full forever, and
+                    # the old blocking put would deadlock the swap with the
+                    # submit lock held.  Fail loudly instead.
+                    drain_deadline = time.perf_counter() + timeout
+                    try:
+                        self._ingress.put(_SENTINEL, timeout=timeout)
+                    except queue.Full:
+                        err = ServingError(
+                            f"server {self.name!r}: swap drain could not even "
+                            f"enqueue its sentinel within {timeout:.1f}s — "
+                            "ingress full and stage 0 wedged"
+                        )
+                        self._fail(err)
+                        raise err
+                    # _recover_stage may replace entries concurrently (a
+                    # crash during the drain restarts the stage, and the
+                    # REPLACEMENT finishes the drain) — so keep joining the
+                    # live list until it is quiet or the deadline expires.
+                    while True:
+                        for t in list(self._threads):
+                            t.join(
+                                timeout=max(
+                                    0.0, drain_deadline - time.perf_counter()
+                                )
+                            )
+                        alive = [t for t in self._threads if t.is_alive()]
+                        if not alive or time.perf_counter() >= drain_deadline:
+                            break
+                    wedged = [t.name for t in alive]
+                    if wedged:
                         # Can't switch under a live old epoch; don't leave a
                         # zombie either (accepting submits nobody consumes) —
                         # close the server and fail the in-flight tickets.
-                        err = ServingError("old epoch failed to drain before swap")
+                        err = ServingError(
+                            f"server {self.name!r}: old epoch failed to drain "
+                            f"before swap (deadline {timeout:.1f}s; wedged: "
+                            f"{', '.join(wedged)})"
+                        )
                         self._fail(err)
                         raise err
                     if self._error is not None:  # old epoch died while draining
@@ -359,28 +648,61 @@ class PipelineServer:
                 self.metrics.new_epoch(self._stage_names(plan))
                 if started:
                     self._spawn_workers()
+                else:
+                    self._reset_recovery_state(len(new_fns))
         finally:
             self._sealed = False
+        self._persist_plan()
         return self
+
+    def _persist_plan(self) -> None:
+        """Save the active plan as the last-known-good (best effort: a
+        persistence error must never fail serving — it is logged)."""
+        store = self.plan_store
+        if store is None:
+            return
+        try:
+            store.save_server(self)
+        except Exception:  # noqa: BLE001 — persistence is best-effort
+            logger.exception(
+                "server %r: last-known-good plan persistence failed "
+                "(serving continues)", self.name,
+            )
 
     def stop(self, timeout: float = 10.0) -> None:
         """Flush in-flight work, then shut the workers down.
 
         Idempotent; re-raises the first worker error if the pipeline
         failed (so a crash can't be silently absorbed by shutdown).
+
+        ``timeout`` is a hard deadline for the whole drain.  A wedged
+        (stalled) worker used to deadlock this path forever — first on
+        the blocking sentinel put when the ingress was full, then
+        silently on the joins.  Now the sentinel put is bounded and any
+        worker still alive past the deadline raises a
+        :class:`ServingError` naming the wedged stage thread(s), so a
+        hung pipeline is loud at shutdown instead of hanging the caller.
         """
         if self.monitor is not None:
             self.monitor.stop()
+        self._watchdog_stop.set()
         with self._lock:
             already_closed = self._closed
             self._closed = True
             started = self._started
+        deadline = time.perf_counter() + timeout
         if started:
             if not already_closed:
                 with self._submit_lock:  # after any in-progress submit's put
-                    self._ingress.put(_SENTINEL)
-            for t in self._threads:  # also reaps workers after a failure
-                t.join(timeout=timeout)
+                    try:
+                        self._ingress.put(_SENTINEL, timeout=timeout)
+                    except queue.Full:
+                        # Stage 0 is wedged behind a full ingress: nothing
+                        # can drain.  Fall through — the join deadline below
+                        # names the stalled stage.
+                        pass
+            for t in list(self._threads):  # also reaps workers after a failure
+                t.join(timeout=max(0.0, deadline - time.perf_counter()))
         if self._error is not None:
             raise self._error
         # A dead adaptive loop must be as loud as a dead worker: if the
@@ -389,6 +711,14 @@ class PipelineServer:
         monitor_error = getattr(self.monitor, "error", None)
         if monitor_error is not None:
             raise ServingError("adaptive monitor failed") from monitor_error
+        if started:
+            wedged = [t.name for t in self._threads if t.is_alive()]
+            if wedged:
+                raise ServingError(
+                    f"server {self.name!r}: stop() deadline ({timeout:.1f}s) "
+                    f"expired with wedged worker(s): {', '.join(wedged)} — "
+                    "stage stalled; in-flight tickets remain unresolved"
+                )
 
     def __enter__(self) -> "PipelineServer":
         return self.start()
@@ -543,77 +873,111 @@ class PipelineServer:
         }
 
     # -------------------------------------------------------------- workers
-    def _forward(self, q: "queue.Queue", item: Any) -> bool:
-        """Bounded put that aborts when a peer worker has failed, so no
-        worker can block forever on a queue whose consumer is dead."""
+    def _forward(
+        self,
+        q: "queue.Queue",
+        item: Any,
+        si: Optional[int] = None,
+        gen: Optional[int] = None,
+    ) -> bool:
+        """Bounded put that aborts when a peer worker has failed (or, for
+        generation-tagged callers, when this worker has been superseded),
+        so no worker can block forever on a queue whose consumer is dead."""
         while True:
             if self._error is not None:
                 return False
+            if gen is not None and not self._gen_current(si, gen):
+                return False  # superseded: the replacement owns the stream
             try:
                 q.put(item, timeout=0.05)
                 return True
             except queue.Full:
                 continue
 
-    def _stage0_worker(self) -> None:
+    def _stage0_worker(self, gen: int) -> None:
         fn = self._stage_fns[0]
         m = self.metrics.stages[0]
+        qs = self._qs  # epoch-bound: a zombie must not touch new queues
         try:
+            redo = self._take_redispatch(0, gen)
+            if redo is not None:
+                self.metrics.recovery.note_redispatch(len(redo))
             while True:
-                items, eof = gather(
-                    self._ingress, self.batch_size, self.flush_timeout_s, _SENTINEL
-                )
+                if redo is not None:
+                    items, eof = redo, False
+                    redo = None
+                else:
+                    items, eof = gather(
+                        self._ingress, self.batch_size, self.flush_timeout_s,
+                        _SENTINEL,
+                    )
+                    if items:
+                        self._set_processing(0, gen, items)
                 if items:
                     t0 = time.perf_counter()
                     tickets = tuple(t for t, _ in items)
                     for t in tickets:
-                        t.dequeued_at = t0
-                        self.metrics.note_dequeue(t.submitted_at, t0)
+                        if t.dequeued_at is None:  # not restamped on re-dispatch
+                            t.dequeued_at = t0
+                            self.metrics.note_dequeue(t.submitted_at, t0)
                     env = stack_envs(
                         [{"input": x} for _, x in items], pad_to=self.batch_size
                     )
-                    out = fn(self.params, env)
                     # materialize before handing off: the stage boundary is
                     # where the activation crosses clusters in the paper
-                    jax.block_until_ready(out)
+                    out = self._execute(0, gen, fn, env)
                     t1 = time.perf_counter()
+                    if not self._gen_current(0, gen):
+                        return  # declared stalled; replacement re-dispatched
                     if m.started_at is None:
                         m.started_at = t0
                     m.stopped_at = t1
                     m.record(t1 - t0, len(items), self.batch_size - len(items))
-                    if not self._forward(
-                        self._qs[0], MicroBatch(tickets, out, valid=len(items))
-                    ):
+                    ok = self._forward(
+                        qs[0], MicroBatch(tickets, out, valid=len(items)), 0, gen
+                    )
+                    self._clear_processing(0, gen)
+                    if not ok:
                         return
                 if eof:
-                    self._forward(self._qs[0], _SENTINEL)
+                    self._forward(qs[0], _SENTINEL, 0, gen)
                     return
         except BaseException as e:
-            self._fail(e)
+            self._on_worker_failure(0, gen, e)
 
-    def _stage_worker(self, si: int) -> None:
+    def _stage_worker(self, si: int, gen: int) -> None:
         fn = self._stage_fns[si]
         m = self.metrics.stages[si]
+        qs = self._qs  # epoch-bound: a zombie must not touch new queues
         try:
+            item = self._take_redispatch(si, gen)
+            if item is not None:
+                self.metrics.recovery.note_redispatch(item.valid)
             while True:
-                item = self._qs[si - 1].get()
-                if item is _SENTINEL:
-                    self._forward(self._qs[si], _SENTINEL)
-                    return
+                if item is None:
+                    item = qs[si - 1].get()
+                    if item is _SENTINEL:
+                        self._forward(qs[si], _SENTINEL, si, gen)
+                        return
+                    self._set_processing(si, gen, item)
                 t0 = time.perf_counter()
-                out = fn(self.params, item.env)
-                jax.block_until_ready(out)
+                out = self._execute(si, gen, fn, item.env)
                 t1 = time.perf_counter()
+                if not self._gen_current(si, gen):
+                    return  # declared stalled; replacement re-dispatched
                 if m.started_at is None:
                     m.started_at = t0
                 m.stopped_at = t1
                 m.record(t1 - t0, item.valid, item.padded)
-                if not self._forward(
-                    self._qs[si], MicroBatch(item.tickets, out, valid=item.valid)
-                ):
+                ok = self._forward(
+                    qs[si], MicroBatch(item.tickets, out, valid=item.valid), si, gen
+                )
+                self._clear_processing(si, gen)
+                if not ok:
                     return
+                item = None
         except BaseException as e:
-            self._fail(e)
+            self._on_worker_failure(si, gen, e)
 
     def _egress_worker(self) -> None:
         try:
@@ -624,6 +988,15 @@ class PipelineServer:
                 (out,) = item.env.values()  # last stage prunes to the output
                 now = time.perf_counter()
                 for ticket, row in zip(item.tickets, split_rows(out, item.valid)):
+                    if ticket.done():
+                        # At-least-once re-dispatch raced a stalled worker's
+                        # late result: the ticket already resolved with an
+                        # identical row (stage fns are pure) — suppress the
+                        # duplicate so clients see each output exactly once.
+                        self.metrics.recovery.note_duplicate()
+                        with self._lock:
+                            self._inflight.discard(ticket)
+                        continue
                     self.metrics.note_complete(ticket.submitted_at, now)
                     with self._lock:
                         self._inflight.discard(ticket)

@@ -1,0 +1,546 @@
+"""Fault-tolerance layer: deterministic injection, recovery semantics,
+degraded-mode re-planning, and last-known-good plan persistence.
+
+Covers the serving/faults.py contract end to end: seeded ``FaultPlan``
+reproducibility and JSON round-trip, the simulator hook, live recovery
+on a real ``PipelineServer`` (crash re-dispatch, transient retry, stall
+watchdog), the loud ``stop()`` deadline, the ``Availability`` IR
+constraint, ``AdaptiveController``/``PartitionController`` degrade +
+rejoin (including belief revert on a failed hot-swap), ``PlanStore``
+round-trips, and ``serve(resume_from=...)`` skipping the cold DSE.
+
+Uses tiny CNNs (16x16 input) so every test runs in seconds on CPU.
+"""
+import json
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cnn.graph import Graph
+from repro.core import (
+    Availability,
+    LayerTimePredictor,
+    evaluate,
+    exhaustive_search,
+    hikey970,
+    partition_search,
+    pipe_it_search,
+)
+from repro.core.calibration import synthetic_model
+from repro.core.simulator import simulate
+from repro.serving import (
+    AutoPlanner,
+    FaultEvent,
+    FaultInjector,
+    FaultPlan,
+    ModelRegistry,
+    MultiModelServer,
+    PartitionController,
+    PipelineServer,
+    PlanStore,
+    RecoveryPolicy,
+    ServingError,
+    SingleStageEngine,
+    attach_adaptive,
+    build_stage_fns,
+    fault_injecting_builder,
+    serve,
+)
+from repro.serving.adaptive import AdaptiveController
+
+PLAT = hikey970()
+
+#: Small backoffs / tight watchdog so recovery tests finish in seconds.
+POLICY = RecoveryPolicy(
+    max_retries=2,
+    backoff_base_s=0.001,
+    backoff_factor=2.0,
+    heartbeat_deadline_s=0.2,
+    restart_delay_s=0.0,
+)
+
+
+def tiny_graph(name: str = "tiny", ch: int = 8) -> Graph:
+    g = Graph(name, (16, 16, 3))
+    a = g.conv("c1", "input", ch, 3)
+    a = g.conv("c2", a, ch, 3, stride=2)
+    a = g.conv("c3", a, 2 * ch, 1)
+    a = g.pool_max("p1", a, 2, 2)
+    a = g.conv("c4", a, 2 * ch, 3)
+    a = g.gap("gap", a)
+    a = g.fc("fc", a, 10)
+    g.softmax("sm", a)
+    return g
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = tiny_graph()
+    params = g.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    images = [
+        jnp.asarray(rng.standard_normal((1, 16, 16, 3)), jnp.float32)
+        for _ in range(10)
+    ]
+    T = LayerTimePredictor(model=synthetic_model(), platform=PLAT).time_matrix(
+        g.descriptors()
+    )
+    plan = pipe_it_search(len(T), PLAT, T, mode="best")
+    return g, params, images, T, plan
+
+
+def _ref_outputs(setup):
+    g, params, images, _, _ = setup
+    eng = SingleStageEngine(g, params)
+    eng.warmup(images[0])
+    return eng.run(images)["outputs"]
+
+
+def _assert_match(ref, outputs):
+    assert len(outputs) == len(ref)
+    for a, b in zip(ref, outputs):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5
+        )
+
+
+# ------------------------------------------------------------- plan + events
+def test_fault_plan_seeded_is_deterministic():
+    a = FaultPlan.seeded(42, n_stages=3, n_events=8)
+    b = FaultPlan.seeded(42, n_stages=3, n_events=8)
+    assert a == b and a.events == b.events
+    c = FaultPlan.seeded(43, n_stages=3, n_events=8)
+    assert a != c
+
+
+def test_fault_plan_json_round_trip():
+    plan = FaultPlan(
+        events=(
+            FaultEvent("crash", stage=1, at_call=3),
+            FaultEvent("transient", stage=0, at_call=2, count=3, model="a"),
+            FaultEvent("stall", stage=2, at_call=5, stall_s=0.7),
+            FaultEvent("cluster_loss", at_s=1.5, lost=(("B", 4),)),
+            FaultEvent("rejoin", at_s=3.0),
+        ),
+        seed=7,
+    )
+    back = FaultPlan.from_json(plan.to_json())
+    assert back == plan
+    # the wire format is plain JSON (no tuples leaking through)
+    json.loads(plan.to_json(indent=2))
+
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError):
+        FaultEvent("meteor")
+    with pytest.raises(ValueError):
+        FaultEvent("transient", count=0)
+    with pytest.raises(ValueError):
+        FaultEvent("stall", stall_s=-1.0)
+    with pytest.raises(ValueError):
+        FaultEvent("cluster_loss")  # needs a non-empty lost mapping
+
+
+def test_model_scoped_views_and_injector_rejects_platform_events():
+    plan = FaultPlan(events=(
+        FaultEvent("crash", stage=0, model="a"),
+        FaultEvent("crash", stage=0, model="b"),
+        FaultEvent("stall", stage=1),  # unscoped: visible to every model
+        FaultEvent("cluster_loss", at_s=1.0, lost=(("B", 2),)),
+    ))
+    assert len(plan.stage_events()) == 3
+    assert len(plan.stage_events(model="a")) == 2  # a's crash + the stall
+    assert len(plan.platform_events()) == 1
+    with pytest.raises(ValueError):
+        FaultInjector(plan.events)  # cluster_loss is not a stage event
+
+
+def test_simulate_faults_reproducible_and_lossless(setup):
+    _, _, _, T, plan = setup
+    fplan = FaultPlan.seeded(9, n_stages=plan.pipeline.p, n_events=5,
+                             max_call=20, stall_s=0.05)
+    clean = simulate(plan, T, PLAT, n_images=40)
+    a = simulate(plan, T, PLAT, n_images=40, faults=fplan)
+    b = simulate(plan, T, PLAT, n_images=40, faults=fplan)
+    assert a.finish_times == b.finish_times  # bit-for-bit replay
+    assert len(a.finish_times) == 40  # no image ever lost
+    assert a.fault_events > 0 and a.fault_delay_s > 0.0
+    assert a.makespan_s > clean.makespan_s  # faults only delay
+
+
+# ------------------------------------------------------------- live recovery
+def test_live_crash_redispatch_zero_loss(setup):
+    g, params, images, _, plan = setup
+    ref = _ref_outputs(setup)
+    fplan = FaultPlan(events=(FaultEvent("crash", stage=0, at_call=2),))
+    inj = fplan.injector(POLICY)
+    srv = PipelineServer(
+        g, params, plan, batch_size=1, flush_timeout_s=0.0,
+        stage_fn_builder=fault_injecting_builder(build_stage_fns, inj),
+        recovery=POLICY,
+    )
+    with srv:
+        res = srv.run(images)
+    _assert_match(ref, res["outputs"])
+    snap = srv.metrics.recovery.snapshot()
+    assert inj.fired_kinds() == {"crash": 1}
+    assert snap["worker_restarts"] >= 1
+    assert snap["redispatched"] >= 1  # the in-flight ticket re-executed
+    assert snap["recoveries"] >= 1 and snap["mttr_s"] > 0.0
+
+
+def test_live_transient_retries_in_place(setup):
+    """count <= max_retries: retried on the same worker, no restart."""
+    g, params, images, _, plan = setup
+    ref = _ref_outputs(setup)
+    fplan = FaultPlan(events=(
+        FaultEvent("transient", stage=0, at_call=1, count=POLICY.max_retries),
+    ))
+    inj = fplan.injector(POLICY)
+    srv = PipelineServer(
+        g, params, plan, batch_size=1, flush_timeout_s=0.0,
+        stage_fn_builder=fault_injecting_builder(build_stage_fns, inj),
+        recovery=POLICY,
+    )
+    with srv:
+        res = srv.run(images)
+    _assert_match(ref, res["outputs"])
+    snap = srv.metrics.recovery.snapshot()
+    assert snap["transient_retries"] == POLICY.max_retries
+    assert snap["worker_restarts"] == 0
+
+
+def test_watchdog_detects_stall_within_deadline(setup):
+    g, params, images, _, plan = setup
+    ref = _ref_outputs(setup)
+    stall_s = 10 * POLICY.heartbeat_deadline_s  # only the watchdog can end it
+    fplan = FaultPlan(events=(
+        FaultEvent("stall", stage=0, at_call=3, stall_s=stall_s),
+    ))
+    inj = fplan.injector(POLICY)
+    srv = PipelineServer(
+        g, params, plan, batch_size=1, flush_timeout_s=0.0,
+        stage_fn_builder=fault_injecting_builder(build_stage_fns, inj),
+        recovery=POLICY,
+    )
+    with srv:
+        res = srv.run(images)
+    _assert_match(ref, res["outputs"])
+    snap = srv.metrics.recovery.snapshot()
+    assert snap["stalls_detected"] >= 1
+    deadline = POLICY.heartbeat_deadline_s
+    period = min(max(deadline / 4.0, 0.002), 0.25)  # watchdog poll cadence
+    assert deadline < snap["last_stall_age_s"] <= deadline + period + 0.25
+
+
+def test_recovery_counters_stay_zero_without_policy(setup):
+    g, params, images, _, plan = setup
+    with PipelineServer(g, params, plan, batch_size=2) as srv:
+        srv.run(images[:4])
+    snap = srv.metrics.recovery.snapshot()
+    assert snap["faults"] == 0 and snap["worker_restarts"] == 0
+
+
+def test_stop_deadline_raises_on_wedged_stage(setup):
+    """The drain deadline must fail loudly (naming the stage), never
+    deadlock — pinned with a sleeping fake stage and no recovery."""
+    g, params, images, _, plan = setup
+    release = threading.Event()
+
+    def sleepy(p, env):
+        release.wait(30.0)
+        return env
+
+    srv = PipelineServer(g, params, plan, batch_size=1, flush_timeout_s=0.0)
+    srv._stage_fns[0] = sleepy
+    srv.start()
+    srv.submit(images[0])
+    time.sleep(0.1)  # let the worker pick the item up and wedge
+    t0 = time.perf_counter()
+    try:
+        with pytest.raises(ServingError, match="stage0"):
+            srv.stop(timeout=0.5)
+        assert time.perf_counter() - t0 < 5.0  # bounded, not a deadlock
+    finally:
+        release.set()
+
+
+# ------------------------------------------------- Availability (core IR)
+def test_availability_constraint(setup):
+    _, _, _, T, plan = setup
+    assert any(ct == "B" for ct, _ in plan.pipeline.stages)  # uses big cores
+    survivors = PLAT.subset({"s": 4})
+    v = evaluate(plan, T, PLAT,
+                 constraints=(Availability.from_platform(survivors),))
+    assert not v.feasible and v.binding == "availability"
+    # severity 0: an availability violation is a safety failure
+    assert v.rank[0] == 0
+    fits = exhaustive_search(len(T), survivors, T)
+    ok = evaluate(fits, T, survivors,
+                  constraints=(Availability.from_platform(survivors),))
+    assert ok.feasible and ok.binding is None
+
+
+def test_availability_requires_stage_shapes():
+    av = Availability(alive=(("B", 4),))
+
+    class NoStages:
+        stages = None
+
+    with pytest.raises(ValueError, match="stages"):
+        av.violation(NoStages(), (1.0,))
+
+
+# ---------------------------------------------------- degrade + rejoin
+def test_controller_degrade_and_rejoin(setup):
+    _, _, _, T, plan = setup
+    ctrl = AdaptiveController(prior=T, plan=plan, platform=PLAT)
+    deg = ctrl.degrade({"B": 4})
+    assert ctrl.degraded
+    assert all(ct == "s" for ct, _ in deg.pipeline.stages)
+    # the degraded plan matches the exhaustive oracle on the survivors
+    oracle = exhaustive_search(len(T), PLAT.subset({"s": 4}), T)
+    assert deg.throughput(T) >= 0.90 * oracle.throughput(T)
+    restored = ctrl.rejoin()
+    assert restored == plan and not ctrl.degraded and ctrl.lost == {}
+
+
+def test_controller_degrade_validation(setup):
+    _, _, _, T, plan = setup
+    ctrl = AdaptiveController(prior=T, plan=plan, platform=PLAT)
+    with pytest.raises(ValueError):
+        ctrl.degrade({"gpu": 1})  # unknown core type
+    with pytest.raises(ValueError):
+        ctrl.degrade({"B": -1})
+    with pytest.raises(ValueError):
+        ctrl.rejoin()  # no preceding degrade
+
+
+def test_monitor_degrade_reverts_belief_on_swap_failure(setup, monkeypatch):
+    """A failed hot-swap must leave the controller's belief on the
+    running truth — no half-degraded state."""
+    g, params, images, T, plan = setup
+    srv = PipelineServer(g, params, plan, batch_size=1, flush_timeout_s=0.0)
+    try:
+        srv.start()
+        monitor = attach_adaptive(srv, T, PLAT, start=False)
+        ctrl = monitor.controller
+
+        def boom(*a, **k):
+            raise RuntimeError("swap refused")
+
+        monkeypatch.setattr(srv, "swap_plan", boom)
+        with pytest.raises(RuntimeError, match="swap refused"):
+            monitor.degrade({"B": 4})
+        assert ctrl.plan == plan and srv.plan == plan
+        assert not ctrl.degraded and ctrl.lost == {}
+        assert ctrl.platform is ctrl.full_platform
+        # the server still serves on the original plan
+        out = srv.submit(images[0]).result(timeout=30.0)
+        assert out is not None
+    finally:
+        srv.stop()
+
+
+def test_partition_controller_degrade_and_rejoin():
+    reg = ModelRegistry()
+    reg.add("a", tiny_graph("a", 8), weight=2.0)
+    reg.add("b", tiny_graph("b", 12))
+    planner = AutoPlanner(platform=PLAT, mode="best")
+    Ts = planner.time_matrices(reg.graphs())
+    part = partition_search(Ts, PLAT)
+    ctrl = PartitionController(Ts, part, PLAT)
+    deg = ctrl.degrade({"B": 4})
+    assert ctrl.degraded
+    for mp in deg.assignments:
+        assert all(ct == "s" for ct, _ in mp.plan.pipeline.stages)
+        assert all(ct.name == "s" for ct in mp.share.core_types)
+    restored = ctrl.rejoin()
+    assert restored.plans() == part.plans() and not ctrl.degraded
+
+
+# -------------------------------------- multimodel mid-swap rollback (c)
+def test_multimodel_mid_swap_rollback_under_crash(monkeypatch):
+    """A partition swap that fails while a worker crash is being
+    recovered must roll the already-swapped models back — the partition
+    keeps describing reality and no ticket is dropped or duplicated."""
+    reg = ModelRegistry()
+    reg.add("a", tiny_graph("a", 8), weight=2.0)
+    reg.add("b", tiny_graph("b", 12))
+    rng = np.random.default_rng(3)
+    images = [
+        jnp.asarray(rng.standard_normal((1, 16, 16, 3)), jnp.float32)
+        for _ in range(8)
+    ]
+    planner = AutoPlanner(platform=PLAT, mode="best")
+    Ts = planner.time_matrices(reg.graphs())
+    part1 = partition_search(Ts, PLAT, weights={"a": 5.0, "b": 1.0})
+    part2 = partition_search(Ts, PLAT, weights={"a": 1.0, "b": 5.0})
+    changed = [mp.name for mp in part2.assignments
+               if mp.plan != part1[mp.name].plan]
+    assert len(changed) >= 2  # the rollback path needs a swapped prefix
+
+    fplan = FaultPlan(events=(FaultEvent("crash", stage=0, at_call=2,
+                                         model="a"),))
+    builders = {
+        n: fault_injecting_builder(build_stage_fns,
+                                   fplan.injector(POLICY, model=n))
+        for n in reg.names
+    }
+    mm = MultiModelServer(reg, part1, batch_size=1, flush_timeout_s=0.0,
+                          queue_depth=4, stage_fn_builders=builders,
+                          recovery=POLICY)
+    try:
+        mm.start()
+        tickets = []
+        for i, img in enumerate(images[:4]):  # the crash fires in here
+            tickets.append(("a", i, mm.submit("a", img)))
+            tickets.append(("b", i, mm.submit("b", img)))
+
+        victim = changed[-1]  # fails AFTER earlier models already swapped
+        monkeypatch.setattr(
+            mm.servers[victim], "swap_plan",
+            lambda *a, **k: (_ for _ in ()).throw(
+                RuntimeError("mid-swap fault")),
+        )
+        with pytest.raises(RuntimeError, match="mid-swap fault"):
+            mm.swap_partition(part2)
+        monkeypatch.undo()
+
+        # belief == reality: the old partition, every server rolled back
+        assert mm.partition is part1 and mm.partition_epoch == 0
+        for mp in part1.assignments:
+            assert mm.servers[mp.name].plan == mp.plan
+
+        for i, img in enumerate(images[4:], start=4):
+            tickets.append(("a", i, mm.submit("a", img)))
+            tickets.append(("b", i, mm.submit("b", img)))
+        refs = {}
+        for n in reg.names:
+            eng = SingleStageEngine(reg[n].graph, reg[n].params)
+            eng.warmup(images[0])
+            refs[n] = eng.run(images)["outputs"]
+        for name, i, t in tickets:
+            np.testing.assert_allclose(
+                np.asarray(refs[name][i]), np.asarray(t.result(timeout=60.0)),
+                rtol=1e-4, atol=1e-5,
+            )
+        assert mm.metrics()["completed"] == 2 * len(images)  # no loss/dup
+        assert mm.server("a").metrics.recovery.snapshot()["worker_restarts"] >= 1
+    finally:
+        mm.stop()
+
+
+# ------------------------------------------------------------ persistence
+def test_plan_store_plan_round_trip(setup, tmp_path):
+    _, _, _, _, plan = setup
+    store = PlanStore(tmp_path / "plan.json")
+    store.save_plan(plan, epoch=3, stage_freqs=(None,) * plan.pipeline.p)
+    ir = store.load_plan()
+    assert ir is not None and ir.as_pipeline_plan() == plan
+    assert store.load_partition(PLAT) is None  # wrong kind
+
+
+def test_plan_store_partition_round_trip(tmp_path):
+    reg = ModelRegistry()
+    reg.add("a", tiny_graph("a", 8))
+    reg.add("b", tiny_graph("b", 12))
+    planner = AutoPlanner(platform=PLAT, mode="best")
+    Ts = planner.time_matrices(reg.graphs())
+    part = partition_search(Ts, PLAT)
+    store = PlanStore(tmp_path / "part.json")
+    store.save_partition(part, epoch=1)
+    back = store.load_partition(PLAT)
+    assert back is not None
+    assert back.plans() == part.plans()
+    assert back.throughputs() == pytest.approx(part.throughputs())
+    assert store.load_plan() is None  # wrong kind
+    # a platform without the persisted cores -> cold start, not an error
+    assert store.load_partition(PLAT.subset({"s": 4})) is None
+
+
+def test_plan_store_unreadable_and_stale_files(tmp_path):
+    missing = PlanStore(tmp_path / "absent.json")
+    assert missing.load() is None and missing.load_plan() is None
+    corrupt = tmp_path / "corrupt.json"
+    corrupt.write_text("{not json")
+    assert PlanStore(corrupt).load() is None
+    stale = tmp_path / "stale.json"
+    stale.write_text(json.dumps({"version": 999, "kind": "plan"}))
+    assert PlanStore(stale).load() is None
+
+
+def test_serve_resume_from_skips_search(setup, tmp_path, monkeypatch):
+    g, params, images, T, _ = setup
+    path = tmp_path / "lkg.json"
+    srv = serve(g, params=params, time_matrix=T, batch_size=1,
+                flush_timeout_s=0.0, warmup=False, plan_store=path)
+    try:
+        baseline = srv.submit(images[0]).result(timeout=30.0)
+        saved_plan = srv.plan
+    finally:
+        srv.stop()
+    assert path.exists()
+
+    import repro.serving.planner as planner_mod
+
+    def no_search(*a, **k):
+        raise AssertionError("resume_from must skip the DSE")
+
+    monkeypatch.setattr(planner_mod, "pipe_it_search", no_search)
+    srv2 = serve(g, params=params, batch_size=1, flush_timeout_s=0.0,
+                 warmup=False, resume_from=path)
+    try:
+        assert srv2.plan == saved_plan
+        out = srv2.submit(images[0]).result(timeout=30.0)
+        np.testing.assert_allclose(np.asarray(baseline), np.asarray(out),
+                                   rtol=1e-4, atol=1e-5)
+    finally:
+        srv2.stop()
+
+
+def test_serve_multi_resume_from_skips_partition_search(tmp_path, monkeypatch):
+    reg = ModelRegistry()
+    reg.add("a", tiny_graph("a", 8))
+    reg.add("b", tiny_graph("b", 12))
+    path = tmp_path / "lkg_mm.json"
+    mm = serve(reg, batch_size=1, flush_timeout_s=0.0, warmup=False,
+               plan_store=path)
+    try:
+        saved = mm.partition.plans()
+    finally:
+        mm.stop()
+    assert path.exists()
+
+    import repro.serving.planner as planner_mod
+
+    def no_search(*a, **k):
+        raise AssertionError("resume_from must skip the partition DSE")
+
+    monkeypatch.setattr(planner_mod, "partition_search", no_search)
+    mm2 = serve(reg, batch_size=1, flush_timeout_s=0.0, warmup=False,
+                resume_from=path)
+    try:
+        assert mm2.partition.plans() == saved
+    finally:
+        mm2.stop()
+
+
+def test_swap_persists_last_known_good(setup, tmp_path):
+    """Every successful hot-swap overwrites the store with the new plan."""
+    g, params, images, T, plan = setup
+    srv = PipelineServer(g, params, plan, batch_size=1, flush_timeout_s=0.0)
+    srv.plan_store = PlanStore(tmp_path / "lkg.json")
+    try:
+        srv.start()
+        other = exhaustive_search(len(T), PLAT.subset({"s": 4}), T)
+        assert other != plan
+        srv.swap_plan(other)
+        ir = srv.plan_store.load_plan()
+        assert ir is not None and ir.as_pipeline_plan() == other
+    finally:
+        srv.stop()
