@@ -13,6 +13,7 @@ from . import (
     adaptive_replan,
     eq12_design_space,
     fault_recovery,
+    fleet_serving,
     fig3_kernel_level,
     fig5_disproportionate,
     fig6_conv_share,
@@ -53,6 +54,7 @@ MODULES = [
     power_aware,
     tail_latency,
     fault_recovery,
+    fleet_serving,
     kernels_bench,
     tpu_pipeit_bench,
     roofline_report,

@@ -28,11 +28,14 @@ import sys
 
 from repro.core import (
     Availability,
+    BoardSpec,
     MinThroughput,
+    Placement,
     Plan,
     PowerCap,
     TailSlo,
     evaluate,
+    fleet_search,
     hikey970,
     latency_aware_search,
     pipe_it_search,
@@ -157,6 +160,38 @@ def _degraded_cells(workload, T):
     ]
 
 
+def _fleet_cells(workload, T):
+    """The fleet axis (PR 9's three-level DSE): one replica of a 2-board
+    ``fleet_search`` placement re-scored through the evaluator under the
+    IR's ``Placement`` constraint (and the simulator cross-check in
+    ``run_matrix``); a second cell scores the same replica plan against a
+    board that lost its big cluster and must pin the infeasible
+    (severity-0 safety) ordering."""
+    boards = (BoardSpec("fb0", PLAT), BoardSpec("fb1", PLAT))
+    fp = fleet_search({"m": T}, boards, replicas={"m": 2})
+    mp = fp.board("fb0").partition["m"]
+    placed = evaluate(
+        mp.plan_ir(), T, mp.share,
+        constraints=(Placement.for_board("fb0", PLAT),),
+    )
+    misplaced = evaluate(
+        mp.plan_ir(), T, mp.share,
+        constraints=(Placement.for_board("fb0", PLAT.subset({"s": 4})),),
+    )
+    return [
+        (
+            {"workload": workload, "objective": "throughput",
+             "cap_frac": None, "slo": None, "fleet": "replica0"},
+            placed,
+        ),
+        (
+            {"workload": workload, "objective": "throughput",
+             "cap_frac": None, "slo": None, "fleet": "misplaced"},
+            misplaced,
+        ),
+    ]
+
+
 def _cell_key(cell):
     slo = cell["slo"]
     key = "|".join([
@@ -169,6 +204,8 @@ def _cell_key(cell):
     # key stays byte-identical (the committed baseline ratchets on them)
     if cell.get("degraded"):
         key += f"|{cell['degraded']}"
+    if cell.get("fleet"):
+        key += f"|fleet_{cell['fleet']}"
     return key
 
 
@@ -178,6 +215,7 @@ def run_matrix(tiny: bool):
         cells = _power_cells(workload, T)
         cells.extend(_slo_cells(workload, T))
         cells.extend(_degraded_cells(workload, T))
+        cells.extend(_fleet_cells(workload, T))
         for cell, ev in cells:
             m = ev.metrics
             sim = evaluate(

@@ -244,6 +244,10 @@ class PlanMetrics:
     # placement-sensitive constraints (:class:`Availability`) check.
     # None only for hand-built metrics that predate the field.
     stages: Optional[Tuple[StageConfig, ...]] = None
+    # The plan's reserved cluster slice (Plan.share), when the plan was
+    # carved by a partition/fleet search — what :class:`Placement` checks
+    # in preference to the (possibly smaller) stage demand.
+    share: Optional[Share] = None
 
     @property
     def stable(self) -> bool:
@@ -445,6 +449,54 @@ class Availability:
         return (0, (-float(missing), score[0]))
 
 
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """The plan must fit on one named board of a fleet.
+
+    The fleet axis of :class:`Availability` (core/fleet.py): ``alive``
+    holds the board's per-core-type counts, and a replica plan whose
+    reserved cluster share (``PlanMetrics.share``, falling back to the
+    stage demand for share-less plans) exceeds them cannot be placed
+    there — a safety failure (severity 0).  Violators rank by fewest
+    missing cores (closest to placeable), then by score.  Build from a
+    board's platform with :meth:`for_board`.
+    """
+
+    board: str
+    alive: Tuple[Tuple[str, int], ...]
+    name: str = dataclasses.field(default="placement", repr=False)
+
+    @classmethod
+    def for_board(cls, board: str, platform: HeteroPlatform) -> "Placement":
+        return cls(
+            board=board,
+            alive=tuple((ct.name, ct.count) for ct in platform.core_types),
+        )
+
+    def violation(
+        self, m: PlanMetrics, score: Tuple[float, ...]
+    ) -> Optional[Violation]:
+        if m.share is not None:
+            demand = {str(ct): int(n) for ct, n in m.share}
+        elif m.stages is not None:
+            demand = {}
+            for core_type, n in m.stages:
+                demand[core_type] = demand.get(core_type, 0) + n
+        else:
+            raise ValueError(
+                "Placement needs PlanMetrics.share or .stages — score the "
+                "plan through evaluate(), which records both"
+            )
+        alive = dict(self.alive)
+        missing = sum(
+            max(0, n - alive.get(core_type, 0))
+            for core_type, n in demand.items()
+        )
+        if missing == 0:
+            return None
+        return (0, (-float(missing), score[0]))
+
+
 # ----------------------------------------------------------------- evaluator
 @dataclasses.dataclass(frozen=True)
 class Evaluation:
@@ -547,6 +599,7 @@ def evaluate(
             prediction=prediction,
             backend="model",
             stages=tuple(plan.stages),
+            share=plan.share,
         )
     elif backend == "simulate":
         res = simulate(
@@ -570,6 +623,7 @@ def evaluate(
             prediction=None,
             backend="simulate",
             stages=tuple(plan.stages),
+            share=plan.share,
         )
     else:
         raise ValueError(f"unknown backend {backend!r}; 'model' or 'simulate'")

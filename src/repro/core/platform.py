@@ -162,7 +162,9 @@ class HeteroPlatform:
     def transfer_time(self, nbytes: int) -> float:
         return self.boundary_latency_s + nbytes / self.boundary_bytes_per_s
 
-    def subset(self, counts: Dict[str, int], name: str = "") -> "HeteroPlatform":
+    def subset(
+        self, counts: Dict[str, int], name: str = "", strict: bool = True
+    ) -> "HeteroPlatform":
         """A sub-platform holding ``counts[ct]`` cores of each core type.
 
         The multi-model partition DSE (core/dse.py) carves the machine
@@ -171,7 +173,21 @@ class HeteroPlatform:
         (``pipe_it_search``) runs unchanged within it.  Core types with a
         zero share are dropped; speeds, L2 sizes, and the boundary
         transfer model are inherited (the CCI is chip-wide).
+
+        A share naming a core type this platform lacks raises ``KeyError``
+        (a plan carved for one board must not be silently re-shaped onto
+        another).  Degrade paths that intentionally project a share onto
+        the surviving clusters pass ``strict=False``.
         """
+        if strict:
+            known = {ct.name for ct in self.core_types}
+            absent = sorted(k for k in counts if k not in known)
+            if absent:
+                raise KeyError(
+                    f"share names core types {absent} absent from platform "
+                    f"{self.name!r} (have {sorted(known)}); pass strict=False "
+                    "to project onto the available clusters"
+                )
         kept: List[CoreType] = []
         for ct in self.core_types:
             n = counts.get(ct.name, 0)

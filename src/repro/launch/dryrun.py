@@ -68,7 +68,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool) -> dict:
     params_abs = abstract_params(cfg)
     pspecs = param_specs(cfg, params_abs, mesh)
     specs = input_specs(cfg, shape)
-    t0 = time.time()
+    t0 = time.perf_counter()
 
     with mesh:
         if shape.kind == "train":
@@ -110,10 +110,10 @@ def run_one(arch: str, shape_name: str, multi_pod: bool) -> dict:
             lowered = jitted.lower(
                 params_abs, specs["caches"], specs["tokens"], specs["pos"]
             )
-        t_lower = time.time() - t0
-        t0 = time.time()
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
         compiled = lowered.compile()
-        t_compile = time.time() - t0
+        t_compile = time.perf_counter() - t0
 
     mem = compiled.memory_analysis()
     print(f"[{arch} x {shape_name} | {'2x16x16' if multi_pod else '16x16'}] "

@@ -40,17 +40,17 @@ def main() -> None:
         batch["patches"] = jax.random.normal(rng, (b, cfg.n_patches, 1152))
 
     caches = init_cache(cfg, b, max_len=args.prompt_len + extra + args.gen)
-    t0 = time.time()
+    t0 = time.perf_counter()
     _, caches = jax.jit(lambda p, bt, c: prefill(cfg, p, bt, c))(params, batch, caches)
     jax.block_until_ready(caches)
-    t_prefill = time.time() - t0
+    t_prefill = time.perf_counter() - t0
     print(f"prefill: {b}x{args.prompt_len} in {t_prefill*1e3:.0f}ms")
 
     step = jax.jit(
         lambda p, c, t, pos: serve_step(cfg, p, c, t, pos), donate_argnums=(1,)
     )
     tok = prompt[:, -1:]
-    t0 = time.time()
+    t0 = time.perf_counter()
     generated = []
     for i in range(args.gen):
         pos = args.prompt_len + extra + i
@@ -59,7 +59,7 @@ def main() -> None:
         tok = nxt[:, None, :] if cfg.n_codebooks else nxt[:, None]
         generated.append(nxt)
     jax.block_until_ready(generated)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     print(
         f"decode: {args.gen} steps x batch {b} = {args.gen*b} tokens "
         f"in {dt*1e3:.0f}ms -> {args.gen*b/dt:,.1f} tok/s"

@@ -49,7 +49,7 @@ def main() -> None:
     )
     it = make_batch_iterator(cfg, args.batch, args.seq, prefetch=2)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     tokens_done = 0
     for step in range(1, args.steps + 1):
         batch = next(it)
@@ -57,7 +57,7 @@ def main() -> None:
         tokens_done += args.batch * args.seq
         if step % args.log_every == 0 or step == 1:
             loss = float(metrics["loss"])
-            dt = time.time() - t0
+            dt = time.perf_counter() - t0
             print(
                 f"step {step:5d}  loss {loss:7.4f}  lr {float(metrics['lr']):.2e}  "
                 f"gnorm {float(metrics['grad_norm']):.2f}  "
@@ -71,7 +71,7 @@ def main() -> None:
                 metadata={"arch": cfg.name, "loss": float(metrics["loss"])},
             )
             print(f"  checkpoint -> {path}")
-    print(f"done in {time.time()-t0:.1f}s")
+    print(f"done in {time.perf_counter()-t0:.1f}s")
 
 
 if __name__ == "__main__":

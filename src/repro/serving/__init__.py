@@ -66,6 +66,7 @@ from .engine import (
     TimeSlicedEngine,
     build_stage_fns,
 )
+from .fleet import FleetAutoscaler, FleetRouter, NoReplica
 from .governor import (
     DvfsGovernor,
     attach_governor,
@@ -114,6 +115,9 @@ __all__ = [
     "FaultEvent",
     "FaultInjector",
     "FaultPlan",
+    "FleetAutoscaler",
+    "FleetRouter",
+    "NoReplica",
     "PlanStore",
     "RecoveryPolicy",
     "TransientStageError",

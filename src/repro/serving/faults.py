@@ -69,6 +69,7 @@ __all__ = [
 
 STAGE_KINDS = ("transient", "crash", "stall")
 PLATFORM_KINDS = ("cluster_loss", "rejoin")
+BOARD_KINDS = ("board_loss", "board_rejoin")
 
 
 class FaultInjected(RuntimeError):
@@ -116,7 +117,11 @@ class FaultEvent:
     Platform events (``cluster_loss``/``rejoin``) bind to ``at_s``
     (harness time) and carry ``lost`` (core-type name -> cores lost);
     ``model`` optionally scopes any event to one model of a
-    ``MultiModelServer``.
+    ``MultiModelServer``.  Board events (``board_loss``/``board_rejoin``)
+    bind to ``at_s`` and name a whole board of a fleet
+    (serving/fleet.py): the board's every replica dies / comes back at
+    once.  ``board`` also scopes STAGE events to one board's injector
+    when the same plan drives a multi-board run.
     """
 
     kind: str
@@ -124,12 +129,13 @@ class FaultEvent:
     at_call: int = 0
     count: int = 1  # transient only: consecutive failing invocations
     stall_s: float = 0.0  # stall only
-    at_s: float = 0.0  # platform events: harness-relative seconds
+    at_s: float = 0.0  # platform/board events: harness-relative seconds
     lost: Tuple[Tuple[str, int], ...] = ()  # cluster_loss: ((name, n), ...)
     model: Optional[str] = None
+    board: Optional[str] = None
 
     def __post_init__(self):
-        if self.kind not in STAGE_KINDS + PLATFORM_KINDS:
+        if self.kind not in STAGE_KINDS + PLATFORM_KINDS + BOARD_KINDS:
             raise ValueError(f"unknown fault kind {self.kind!r}")
         if self.kind == "transient" and self.count < 1:
             raise ValueError("transient count must be >= 1")
@@ -137,6 +143,8 @@ class FaultEvent:
             raise ValueError("stall_s must be >= 0")
         if self.kind == "cluster_loss" and not self.lost:
             raise ValueError("cluster_loss needs a non-empty 'lost' mapping")
+        if self.kind in BOARD_KINDS and not self.board:
+            raise ValueError(f"{self.kind} needs a board name")
 
     @property
     def lost_counts(self) -> Dict[str, int]:
@@ -171,11 +179,18 @@ class FaultPlan:
         object.__setattr__(self, "events", tuple(self.events))
 
     # ------------------------------------------------------------ views
-    def stage_events(self, model: Optional[str] = None) -> Tuple[FaultEvent, ...]:
-        """Events that fire inside stage fns (optionally one model's)."""
+    def stage_events(
+        self,
+        model: Optional[str] = None,
+        board: Optional[str] = None,
+    ) -> Tuple[FaultEvent, ...]:
+        """Events that fire inside stage fns (optionally scoped to one
+        model and/or one board of a fleet)."""
         return tuple(
             e for e in self.events
-            if e.kind in STAGE_KINDS and (model is None or e.model in (None, model))
+            if e.kind in STAGE_KINDS
+            and (model is None or e.model in (None, model))
+            and (board is None or e.board in (None, board))
         )
 
     def platform_events(self) -> Tuple[FaultEvent, ...]:
@@ -183,13 +198,22 @@ class FaultPlan:
         evs = [e for e in self.events if e.kind in PLATFORM_KINDS]
         return tuple(sorted(evs, key=lambda e: e.at_s))
 
+    def board_events(self) -> Tuple[FaultEvent, ...]:
+        """Board loss / rejoin events, ordered by harness time.
+
+        Harnesses drain these and call ``FleetRouter.fail_board`` /
+        ``.rejoin_board`` (serving/fleet.py) at each ``at_s``."""
+        evs = [e for e in self.events if e.kind in BOARD_KINDS]
+        return tuple(sorted(evs, key=lambda e: e.at_s))
+
     def injector(
         self,
         policy: Optional[RecoveryPolicy] = None,
         model: Optional[str] = None,
+        board: Optional[str] = None,
     ) -> "FaultInjector":
         """A fresh runtime for one run (counters start at zero)."""
-        return FaultInjector(self.stage_events(model), policy=policy)
+        return FaultInjector(self.stage_events(model, board), policy=policy)
 
     # ------------------------------------------------------- round trip
     def to_dict(self) -> Dict[str, Any]:
@@ -242,6 +266,30 @@ class FaultPlan:
                     kind, stage=stage, at_call=at_call, stall_s=stall_s,
                 ))
         return cls(events=tuple(events), seed=seed)
+
+    @classmethod
+    def seeded_board_cycle(
+        cls,
+        seed: int,
+        boards: Sequence[str],
+        *,
+        at_s: float = 0.0,
+        rejoin_after_s: float = 0.0,
+    ) -> "FaultPlan":
+        """A reproducible board-loss -> rejoin cycle: the seed picks WHICH
+        board dies (same seed -> same victim, bit-for-bit)."""
+        if not boards:
+            raise ValueError("need >= 1 board name")
+        victim = random.Random(seed).choice(list(boards))
+        return cls(
+            events=(
+                FaultEvent("board_loss", at_s=at_s, board=victim),
+                FaultEvent(
+                    "board_rejoin", at_s=at_s + rejoin_after_s, board=victim
+                ),
+            ),
+            seed=seed,
+        )
 
 
 class FaultInjector:

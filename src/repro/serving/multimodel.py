@@ -214,7 +214,12 @@ class MultiModelServer:
             try:
                 srv.stop(timeout=timeout)
             except BaseException as e:  # noqa: BLE001 — keep stopping peers
-                if first is None:
+                # an interrupt (Ctrl-C / interpreter shutdown) outranks any
+                # earlier serving error: it must reach the caller, not the log
+                if first is None or (
+                    isinstance(e, (KeyboardInterrupt, SystemExit))
+                    and not isinstance(first, (KeyboardInterrupt, SystemExit))
+                ):
                     first = e
         if first is not None:
             raise first
@@ -399,12 +404,28 @@ class MultiModelServer:
                     if mp.plan != srv.plan:
                         srv.swap_plan(mp.plan, timeout=timeout)
                         swapped.append(mp.name)
-            except BaseException:
+            except BaseException as swap_err:
+                # A Ctrl-C / interpreter-shutdown interrupt — whether it WAS
+                # the swap error or fires mid-rollback — must reach the
+                # caller after the rollback completes, never be swallowed
+                # into the unwind log as if it were a broken server.
+                interrupt: Optional[BaseException] = (
+                    swap_err
+                    if isinstance(swap_err, (KeyboardInterrupt, SystemExit))
+                    else None
+                )
                 for name in reversed(swapped):  # restore the running truth
                     try:
                         self.servers[name].swap_plan(
                             self.partition[name].plan, timeout=timeout
                         )
+                    except (KeyboardInterrupt, SystemExit) as e:
+                        logger.exception(
+                            "swap_partition rollback for model %r interrupted "
+                            "(re-raised after the remaining rollbacks)", name,
+                        )
+                        if interrupt is None:
+                            interrupt = e
                     except BaseException:  # noqa: BLE001 — server is broken;
                         # its worker error resurfaces on stop(); log now so
                         # the rollback failure is visible at the moment the
@@ -414,6 +435,8 @@ class MultiModelServer:
                             "(server broken; original swap error re-raised, "
                             "worker error will resurface on stop())", name,
                         )
+                if interrupt is not None and interrupt is not swap_err:
+                    raise interrupt from swap_err
                 raise
             self.partition = partition
             self.partition_epoch += 1

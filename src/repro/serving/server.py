@@ -720,6 +720,22 @@ class PipelineServer:
                     "stage stalled; in-flight tickets remain unresolved"
                 )
 
+    def crash(self, reason: Optional[BaseException] = None) -> None:
+        """Simulate an abrupt server death (power loss, kernel panic).
+
+        Unlike :meth:`stop`, nothing is flushed: the server closes
+        immediately, every in-flight ticket FAILS, and the workers are
+        poisoned.  The fleet layer (serving/fleet.py) uses this to model
+        board loss — the failed tickets are what the router re-dispatches
+        to surviving replicas.  A later :meth:`stop` re-raises the crash
+        reason (same contract as any worker failure)."""
+        self._watchdog_stop.set()
+        self._fail(
+            reason
+            if reason is not None
+            else ServingError(f"server {self.name!r}: simulated crash")
+        )
+
     def __enter__(self) -> "PipelineServer":
         return self.start()
 

@@ -81,6 +81,20 @@ def test_serve_power_capped_example():
     assert "outputs still equal the single-stage baseline" in out
 
 
+def test_serve_fleet_example():
+    """Fleet quickstart: three-level DSE + router, a seeded board crash
+    with exactly-once re-dispatch, rejoin, and rate-driven scale-in."""
+    out = _run(
+        [sys.executable, "examples/serve_fleet.py", "--tiny"],
+        env=dict(ENV, REPRO_PALLAS_INTERPRET="1"),
+    )
+    assert "fleet plan" in out and " || " in out
+    assert "outputs equal each model's single-engine baseline" in out
+    assert "exactly-once, no ticket dropped" in out
+    assert "fleet serving again" in out
+    assert "every submitted ticket completed exactly once" in out
+
+
 def test_power_benchmark_smoke():
     """Tiny power benchmark: the >=15% iso-throughput energy cut, the cap
     satisfaction, and the oracle-match asserts run INSIDE the benchmark."""

@@ -1,0 +1,189 @@
+"""Regression tests for the ISSUE 9 serving bugfixes.
+
+* Clock source: every serving/launch timing path must use a monotonic
+  clock (``time.monotonic`` / ``time.perf_counter``), never the wall
+  clock — NTP steps and manual clock changes must not corrupt latency
+  metrics, stall detection, or flush deadlines.  Pinned two ways: a
+  source scan, and a live server run under a hostile ``time.time``.
+* Interrupt handling: the multi-model unwind paths (``stop``,
+  ``swap_partition`` rollback) catch ``BaseException`` to keep peers
+  shutting down — but a ``KeyboardInterrupt`` / ``SystemExit`` must
+  still reach the caller, never be swallowed into a log.
+"""
+import pathlib
+import re
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cnn.graph import Graph
+from repro.core import hikey970, partition_search
+from repro.serving import (
+    AutoPlanner,
+    ModelRegistry,
+    MultiModelServer,
+    SingleStageEngine,
+)
+
+PLAT = hikey970()
+SRC = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro"
+
+
+def tiny(name: str, ch: int = 8) -> Graph:
+    g = Graph(name, (16, 16, 3))
+    a = g.conv("c1", "input", ch, 3)
+    a = g.conv("c2", a, ch, 3, stride=2)
+    a = g.conv("c3", a, 2 * ch, 1)
+    a = g.gap("gap", a)
+    a = g.fc("fc", a, 10)
+    g.softmax("sm", a)
+    return g
+
+
+# ------------------------------------------------------------- clock source
+def test_no_wall_clock_in_serving_or_launch():
+    """``time.time()`` measures the wall clock and goes backwards on NTP
+    steps; every duration / deadline in the serving and launch layers
+    must come from a monotonic source."""
+    offenders = []
+    for sub in ("serving", "launch"):
+        for path in sorted((SRC / sub).glob("*.py")):
+            for i, line in enumerate(path.read_text().splitlines(), 1):
+                if re.search(r"\btime\.time\(", line):
+                    offenders.append(f"{path.name}:{i}: {line.strip()}")
+    assert not offenders, "wall-clock timing in serving/launch:\n" + "\n".join(
+        offenders
+    )
+
+
+def test_serving_survives_hostile_wall_clock(monkeypatch):
+    """A live pipeline keeps completing work and reporting sane metrics
+    while ``time.time`` jumps backwards on every call — only possible if
+    no serving path reads it."""
+    steps = {"n": 0.0}
+
+    def backwards_clock():
+        steps["n"] -= 3600.0  # one hour back per call
+        return 1e9 + steps["n"]
+
+    monkeypatch.setattr(time, "time", backwards_clock)
+
+    reg = ModelRegistry()
+    reg.add("a", tiny("a", 8))
+    Ts = AutoPlanner(platform=PLAT, mode="best").time_matrices(reg.graphs())
+    part = partition_search(Ts, PLAT)
+    rng = np.random.default_rng(0)
+    images = [
+        jnp.asarray(rng.standard_normal((1, 16, 16, 3)), jnp.float32)
+        for _ in range(6)
+    ]
+    eng = SingleStageEngine(reg["a"].graph, reg["a"].params)
+    eng.warmup(images[0])
+    refs = eng.run(images)["outputs"]
+
+    with MultiModelServer(reg, part, queue_depth=2) as mm:
+        mm.warmup()
+        tickets = [mm.submit("a", img) for img in images]
+        outs = [t.result(timeout=60) for t in tickets]
+        snap = mm.metrics()
+    for got, want in zip(outs, refs):
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5
+        )
+    assert snap["completed"] == len(images)
+    m = snap["models"]["a"]
+    # a wall-clock delta would be hugely negative (hours per call)
+    assert m["e2e_p50_s"] >= 0.0 and m["queue_wait_p50_s"] >= 0.0
+    assert m["throughput_img_s"] > 0.0
+
+
+# -------------------------------------------------- interrupts in unwinds
+@pytest.fixture()
+def duo_server():
+    """An UNSTARTED two-model server: the interrupt-path tests replace
+    the inner ``swap_plan`` / ``stop`` methods, so no worker threads are
+    needed and the fixture stays instant."""
+    reg = ModelRegistry()
+    reg.add("a", tiny("a", 8))
+    reg.add("b", tiny("b", 12))
+    Ts = AutoPlanner(platform=PLAT, mode="best").time_matrices(reg.graphs())
+    part = partition_search(Ts, PLAT)
+    return MultiModelServer(reg, part, queue_depth=2), part
+
+
+def test_swap_partition_ki_mid_swap_rolls_back_then_propagates(duo_server):
+    """KeyboardInterrupt from model B's swap must still roll model A back
+    to the running partition before it reaches the caller."""
+    mm, part = duo_server
+    calls = []
+    first, second = part.names[0], part.names[1]
+
+    def fake_swap_first(plan, timeout=60.0):
+        calls.append(plan)
+        mm.servers[first].plan = plan
+
+    def fake_swap_second(plan, timeout=60.0):
+        raise KeyboardInterrupt
+
+    mm.servers[first].swap_plan = fake_swap_first
+    mm.servers[second].swap_plan = fake_swap_second
+    # force both models to look changed so the swap loop visits them
+    mm.servers[first].plan = None
+    mm.servers[second].plan = None
+    with pytest.raises(KeyboardInterrupt):
+        mm.swap_partition(part)
+    # swapped forward once, rolled back once, belief unchanged
+    assert calls == [part[first].plan, part[first].plan]
+    assert mm.partition is part and mm.partition_epoch == 0
+
+
+def test_swap_partition_ki_during_rollback_reraised_after_unwind(duo_server):
+    """A Ctrl-C landing in the rollback itself re-raises AFTER the
+    remaining rollbacks ran, chained to the original swap error."""
+    mm, part = duo_server
+    rolled_back = []
+    first, second = part.names[0], part.names[1]
+    swap_err = ValueError("swap exploded")
+
+    def fake_swap_first(plan, timeout=60.0):
+        if not rolled_back:  # forward pass
+            rolled_back.append("forward")
+            mm.servers[first].plan = plan
+            return
+        raise KeyboardInterrupt  # rollback pass
+
+    def fake_swap_second(plan, timeout=60.0):
+        raise swap_err
+
+    mm.servers[first].swap_plan = fake_swap_first
+    mm.servers[second].swap_plan = fake_swap_second
+    mm.servers[first].plan = None
+    mm.servers[second].plan = None
+    with pytest.raises(KeyboardInterrupt) as excinfo:
+        mm.swap_partition(part)
+    assert excinfo.value.__cause__ is swap_err
+    assert mm.partition is part and mm.partition_epoch == 0
+
+
+def test_stop_prefers_interrupt_over_earlier_error(duo_server):
+    """stop() keeps stopping peers on any failure, but an interrupt beats
+    an earlier ServingError as the exception that finally surfaces."""
+    mm, part = duo_server
+    stopped = []
+    first, second = part.names[0], part.names[1]
+
+    def stop_first(timeout=10.0):
+        stopped.append(first)
+        raise ValueError("worker died earlier")
+
+    def stop_second(timeout=10.0):
+        stopped.append(second)
+        raise KeyboardInterrupt
+
+    mm.servers[first].stop = stop_first
+    mm.servers[second].stop = stop_second
+    with pytest.raises(KeyboardInterrupt):
+        mm.stop()
+    assert stopped == [first, second]  # both peers still shut down
