@@ -32,14 +32,14 @@ def main():
     it = make_batch_iterator(cfg, batch_size=8, seq_len=128)
 
     first_loss = None
-    t0 = time.time()
+    t0 = time.perf_counter()
     for step in range(1, steps + 1):
         params, opt, m = step_fn(params, opt, next(it))
         if step == 1:
             first_loss = float(m["loss"])
         if step % 25 == 0 or step == 1:
             print(f"step {step:4d}  loss {float(m['loss']):.4f}  "
-                  f"{8*128*step/(time.time()-t0):,.0f} tok/s")
+                  f"{8*128*step/(time.perf_counter()-t0):,.0f} tok/s")
     final = float(m["loss"])
     print(f"\nloss: {first_loss:.3f} -> {final:.3f} "
           f"({'LEARNED ✓' if final < first_loss * 0.7 else 'insufficient drop ✗'})")

@@ -1,0 +1,9 @@
+"""Static analysis over the repro codebase itself.
+
+``repro.analysis.lint`` (aka *replint*) machine-checks the concurrency
+and invariant rules that earlier PRs enforced by hand — see DESIGN.md
+§12 for the rule-to-bug-class map.  Everything under this package is
+pure stdlib (``ast`` + ``pathlib``): it must stay importable and fast
+in environments where jax is absent, because CI runs it before the
+test dependencies are exercised.
+"""

@@ -1,0 +1,40 @@
+"""replint — AST-based concurrency & invariant lint for this codebase.
+
+Usage (CLI)::
+
+    python -m repro.analysis.lint src tests benchmarks examples
+    python -m repro.analysis.lint src --format json --output report.json
+    python -m repro.analysis.lint src --select wall-clock,lock-order
+
+Usage (API)::
+
+    from repro.analysis.lint import run_lint
+    result = run_lint([pathlib.Path("src")], select=["wall-clock"])
+    assert not result.findings
+
+Rules (DESIGN.md §12 maps each to the historical bug class it
+fossilizes): ``wall-clock``, ``swallowed-exception``,
+``lock-discipline``, ``lock-order``, ``thread-lifecycle``,
+``pallas-hygiene``, plus the ``suppression`` meta-rule.  Suppress a
+finding in place with::
+
+    something_flagged()  # replint: disable=<rule> -- <why it is safe>
+
+The reason after ``--`` is mandatory; reasonless disables do not
+suppress and are themselves findings.
+"""
+from . import rules  # noqa: F401  (imports populate REGISTRY)
+from .core import (  # noqa: F401
+    Finding,
+    LintResult,
+    ModuleInfo,
+    REGISTRY,
+    Rule,
+    Suppression,
+    load_baseline,
+    register,
+    run_lint,
+    split_baselined,
+    write_baseline,
+)
+from .reporters import render_human, render_json  # noqa: F401

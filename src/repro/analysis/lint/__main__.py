@@ -1,0 +1,92 @@
+"""CLI: ``python -m repro.analysis.lint <paths...>``.
+
+Exit codes: 0 clean (or everything baselined), 1 non-baselined
+findings, 2 usage error.  ``--write-baseline`` snapshots the current
+findings into the baseline file (grandfathering them) and exits 0.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+from .core import REGISTRY, load_baseline, run_lint, split_baselined, write_baseline
+from .reporters import render_human, render_json
+
+DEFAULT_BASELINE = ".replint-baseline.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="AST-based concurrency & invariant lint (replint)",
+    )
+    ap.add_argument("paths", nargs="*", help="files or directories to lint")
+    ap.add_argument(
+        "--format", choices=("human", "json"), default="human", dest="fmt"
+    )
+    ap.add_argument(
+        "--output", type=pathlib.Path, default=None,
+        help="write the report here instead of stdout",
+    )
+    ap.add_argument(
+        "--baseline", type=pathlib.Path, default=pathlib.Path(DEFAULT_BASELINE),
+        help=f"baseline file (default {DEFAULT_BASELINE}; missing = empty)",
+    )
+    ap.add_argument(
+        "--write-baseline", action="store_true",
+        help="snapshot current findings into --baseline and exit 0",
+    )
+    ap.add_argument(
+        "--select", default=None,
+        help="comma-separated rule ids to run (default: all)",
+    )
+    ap.add_argument(
+        "--list-rules", action="store_true", help="list rule ids and exit"
+    )
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid in sorted(REGISTRY):
+            print(f"{rid:22s} {REGISTRY[rid].description}")
+        return 0
+    if not args.paths:
+        ap.print_usage(sys.stderr)
+        print("error: no paths given", file=sys.stderr)
+        return 2
+
+    select = (
+        [s.strip() for s in args.select.split(",") if s.strip()]
+        if args.select
+        else None
+    )
+    try:
+        result = run_lint([pathlib.Path(p) for p in args.paths], select=select)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        write_baseline(args.baseline, result.findings)
+        print(
+            f"replint: wrote {len(result.findings)} finding(s) to "
+            f"{args.baseline}"
+        )
+        return 0
+
+    baseline = load_baseline(args.baseline)
+    new, baselined = split_baselined(result.findings, baseline)
+    report = (render_json if args.fmt == "json" else render_human)(
+        result, new, baselined
+    )
+    if args.output is not None:
+        args.output.write_text(report + "\n")
+        # keep the human one-liner on stdout so CI logs show the verdict
+        print(render_human(result, new, baselined).splitlines()[-1])
+    else:
+        print(report)
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,426 @@
+"""replint core — findings, rule registry, suppressions, baseline, engine.
+
+The framework is deliberately small:
+
+* A :class:`Rule` inspects one parsed module (:class:`ModuleInfo`) and
+  yields :class:`Finding`\\ s.  Rules register themselves into
+  :data:`REGISTRY` at import time (``rules/__init__.py`` imports every
+  rule module).
+* Per-line suppressions are comments of the form::
+
+      # replint: disable=<rule>[,<rule2>] -- <reason>
+
+  either on the flagged line or on a comment line directly above it.
+  The reason is MANDATORY: a disable without ``-- <reason>`` does not
+  suppress anything and is itself reported under the ``suppression``
+  rule, so the acceptance bar "every suppression carries a written
+  reason" is machine-enforced, not reviewed.
+* A baseline file (JSON, see :func:`load_baseline`) grandfathers known
+  findings so the CI gate can be turned on before the tree is fully
+  clean.  Findings match baseline entries by ``(rule, path, symbol)``
+  — symbols are line-number-free (e.g. ``Server._queue``), so baselined
+  findings survive unrelated edits to the file.
+
+Everything here is stdlib-only; importing jax from a linter that gates
+CI would make the gate as slow as the thing it guards.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import pathlib
+import re
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "Finding",
+    "LintResult",
+    "ModuleInfo",
+    "REGISTRY",
+    "Rule",
+    "Suppression",
+    "dotted_name",
+    "load_baseline",
+    "register",
+    "run_lint",
+    "write_baseline",
+]
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*replint:\s*disable=([A-Za-z0-9_,\- ]+?)\s*(?:--\s*(\S.*?))?\s*$"
+)
+
+
+# --------------------------------------------------------------- findings
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location.
+
+    ``symbol`` is a stable, line-free identity for the violated
+    construct (``Class.attr``, a resolved call name, ...) used for
+    baseline matching; when a rule leaves it empty the message doubles
+    as the identity, so messages must not embed line numbers.
+    """
+
+    rule: str
+    path: str  # posix path relative to the lint root
+    line: int
+    message: str
+    symbol: str = ""
+
+    @property
+    def baseline_key(self) -> Tuple[str, str, str]:
+        return (self.rule, self.path, self.symbol or self.message)
+
+    def to_json(self) -> Dict[str, object]:
+        return {
+            "rule": self.rule,
+            "path": self.path,
+            "line": self.line,
+            "message": self.message,
+            "symbol": self.symbol,
+        }
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    """A parsed ``# replint: disable=...`` comment."""
+
+    line: int  # line the comment sits on
+    target: int  # line whose findings it suppresses
+    rules: Tuple[str, ...]
+    reason: str
+
+    @property
+    def has_reason(self) -> bool:
+        return bool(self.reason.strip())
+
+    def matches(self, finding: Finding) -> bool:
+        return finding.line == self.target and (
+            finding.rule in self.rules or "all" in self.rules
+        )
+
+
+# ---------------------------------------------------------------- modules
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _import_aliases(tree: ast.Module) -> Dict[str, str]:
+    """Local name -> fully-qualified dotted origin, from every import
+    statement in the module (any nesting level — kernels import inside
+    ``try`` blocks)."""
+    aliases: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0]
+                )
+        elif isinstance(node, ast.ImportFrom) and node.module and not node.level:
+            for a in node.names:
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+        elif isinstance(node, ast.ImportFrom) and node.level:
+            # relative import: keep the tail (``from .config import x``
+            # -> ``<rel>.config.x``) so suffix matching still works
+            mod = node.module or ""
+            for a in node.names:
+                aliases[a.asname or a.name] = f"<rel>.{mod}.{a.name}".rstrip(".")
+    return aliases
+
+
+class ModuleInfo:
+    """A parsed module plus the per-module indexes rules share."""
+
+    def __init__(self, abspath: pathlib.Path, relpath: str) -> None:
+        self.abspath = abspath
+        self.relpath = relpath  # posix, relative to the lint root
+        self.text = abspath.read_text()
+        self.lines = self.text.splitlines()
+        self.tree: Optional[ast.Module] = None
+        self.syntax_error: Optional[SyntaxError] = None
+        try:
+            self.tree = ast.parse(self.text, filename=str(abspath))
+        except SyntaxError as e:  # surfaced as a finding by the engine
+            self.syntax_error = e
+        self.aliases: Dict[str, str] = (
+            _import_aliases(self.tree) if self.tree is not None else {}
+        )
+        self._parents: Optional[Dict[ast.AST, ast.AST]] = None
+        self._cache: Dict[str, object] = {}  # scratch shared across rules
+
+    # -- resolution helpers -------------------------------------------
+    def resolve(self, node: ast.AST) -> Optional[str]:
+        """Dotted name with the leading segment expanded through the
+        module's import aliases (``pl.pallas_call`` ->
+        ``jax.experimental.pallas.pallas_call``)."""
+        name = dotted_name(node)
+        if name is None:
+            return None
+        head, _, rest = name.partition(".")
+        origin = self.aliases.get(head)
+        if origin is None:
+            return name
+        return f"{origin}.{rest}" if rest else origin
+
+    def imports(self, leaf: str) -> bool:
+        """True if any import binds a name resolving to ``leaf`` (suffix
+        match, so relative imports count)."""
+        return any(v == leaf or v.endswith(f".{leaf}") for v in self.aliases.values())
+
+    @property
+    def parents(self) -> Dict[ast.AST, ast.AST]:
+        if self._parents is None:
+            self._parents = {}
+            for parent in ast.walk(self.tree):
+                for child in ast.iter_child_nodes(parent):
+                    self._parents[child] = parent
+        return self._parents
+
+    def enclosing_function(
+        self, node: ast.AST
+    ) -> Optional[ast.AST]:
+        """Nearest enclosing FunctionDef/AsyncFunctionDef, else None."""
+        cur = self.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return cur
+            cur = self.parents.get(cur)
+        return None
+
+    def enclosing_class(self, node: ast.AST) -> Optional[ast.ClassDef]:
+        cur = self.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, ast.ClassDef):
+                return cur
+            cur = self.parents.get(cur)
+        return None
+
+    # -- suppressions -------------------------------------------------
+    @property
+    def suppressions(self) -> List[Suppression]:
+        if "suppressions" not in self._cache:
+            sups: List[Suppression] = []
+            for i, raw in enumerate(self.lines, 1):
+                m = _SUPPRESS_RE.search(raw)
+                if not m:
+                    continue
+                rules = tuple(
+                    r.strip() for r in m.group(1).split(",") if r.strip()
+                )
+                # a comment-only line shields the next line; an inline
+                # comment shields its own line
+                target = i + 1 if raw.strip().startswith("#") else i
+                sups.append(
+                    Suppression(i, target, rules, (m.group(2) or ""))
+                )
+            self._cache["suppressions"] = sups
+        return self._cache["suppressions"]  # type: ignore[return-value]
+
+
+# ------------------------------------------------------------------ rules
+class Rule:
+    """Base class; subclasses set ``id``/``description`` and implement
+    :meth:`check`."""
+
+    id: str = ""
+    description: str = ""
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        raise NotImplementedError
+
+
+REGISTRY: Dict[str, Rule] = {}
+
+
+def register(cls):
+    """Class decorator: instantiate and add to :data:`REGISTRY`."""
+    inst = cls()
+    if not inst.id:
+        raise ValueError(f"rule {cls.__name__} has no id")
+    if inst.id in REGISTRY:
+        raise ValueError(f"duplicate rule id {inst.id!r}")
+    REGISTRY[inst.id] = inst
+    return cls
+
+
+class _SuppressionRule(Rule):
+    """Meta-rule: malformed suppressions are findings themselves.
+
+    * a disable without ``-- <reason>`` (it also does not suppress);
+    * a disable naming a rule that does not exist (typo'd suppressions
+      otherwise rot silently while the finding they meant to silence
+      still fires).
+    """
+
+    id = "suppression"
+    description = "replint suppressions must name real rules and carry a reason"
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        for sup in mod.suppressions:
+            if not sup.has_reason:
+                yield Finding(
+                    self.id,
+                    mod.relpath,
+                    sup.line,
+                    "suppression missing a reason: write "
+                    "'# replint: disable=<rule> -- <why>'",
+                    symbol=f"no-reason:{','.join(sup.rules)}",
+                )
+            for r in sup.rules:
+                if r != "all" and r not in REGISTRY:
+                    yield Finding(
+                        self.id,
+                        mod.relpath,
+                        sup.line,
+                        f"suppression names unknown rule {r!r} "
+                        f"(known: {', '.join(sorted(REGISTRY))})",
+                        symbol=f"unknown-rule:{r}",
+                    )
+
+
+REGISTRY["suppression"] = _SuppressionRule()
+
+
+# ----------------------------------------------------------------- engine
+@dataclasses.dataclass
+class LintResult:
+    findings: List[Finding]  # post-suppression, pre-baseline
+    suppressed: List[Finding]
+    files: int
+
+
+def iter_py_files(
+    paths: Sequence[pathlib.Path],
+) -> Iterator[pathlib.Path]:
+    seen = set()
+    for p in paths:
+        if p.is_dir():
+            candidates = sorted(p.rglob("*.py"))
+        else:
+            candidates = [p]
+        for c in candidates:
+            if any(
+                part.startswith(".") or part == "__pycache__"
+                for part in c.parts
+            ):
+                continue
+            rp = c.resolve()
+            if rp not in seen:
+                seen.add(rp)
+                yield c
+
+
+def run_lint(
+    paths: Sequence[pathlib.Path],
+    select: Optional[Sequence[str]] = None,
+    root: Optional[pathlib.Path] = None,
+) -> LintResult:
+    """Lint every ``.py`` under ``paths`` with the selected rules.
+
+    ``select=None`` runs all registered rules.  ``root`` anchors the
+    relative paths in findings (defaults to cwd); rule scoping (e.g.
+    the wall-clock rule's timing-path dirs) matches against those
+    relative paths.
+    """
+    root = (root or pathlib.Path.cwd()).resolve()
+    if select is not None:
+        unknown = sorted(set(select) - set(REGISTRY))
+        if unknown:
+            raise ValueError(f"unknown rule(s): {', '.join(unknown)}")
+        rules = [REGISTRY[r] for r in select]
+    else:
+        rules = list(REGISTRY.values())
+
+    findings: List[Finding] = []
+    suppressed: List[Finding] = []
+    files = 0
+    for path in iter_py_files([pathlib.Path(p) for p in paths]):
+        files += 1
+        try:
+            rel = path.resolve().relative_to(root).as_posix()
+        except ValueError:  # outside root (explicit file arg)
+            rel = path.as_posix()
+        mod = ModuleInfo(path, rel)
+        if mod.syntax_error is not None:
+            findings.append(
+                Finding(
+                    "parse-error",
+                    rel,
+                    mod.syntax_error.lineno or 1,
+                    f"file does not parse: {mod.syntax_error.msg}",
+                )
+            )
+            continue
+        raw: List[Finding] = []
+        for rule in rules:
+            raw.extend(rule.check(mod))
+        effective = [s for s in mod.suppressions if s.has_reason]
+        for f in raw:
+            if f.rule != "suppression" and any(
+                s.matches(f) for s in effective
+            ):
+                suppressed.append(f)
+            else:
+                findings.append(f)
+    key = lambda f: (f.path, f.line, f.rule, f.message)  # noqa: E731
+    findings.sort(key=key)
+    suppressed.sort(key=key)
+    return LintResult(findings, suppressed, files)
+
+
+# --------------------------------------------------------------- baseline
+BASELINE_VERSION = 1
+
+
+def load_baseline(path: pathlib.Path) -> List[Finding]:
+    """Read a baseline file; missing file -> empty baseline; a corrupt
+    or wrong-version file raises (a silently-ignored baseline would
+    un-gate CI)."""
+    if not path.exists():
+        return []
+    data = json.loads(path.read_text())
+    if data.get("version") != BASELINE_VERSION:
+        raise ValueError(
+            f"baseline {path}: unsupported version {data.get('version')!r}"
+        )
+    return [
+        Finding(
+            rule=e["rule"],
+            path=e["path"],
+            line=int(e.get("line", 0)),
+            message=e.get("message", ""),
+            symbol=e.get("symbol", ""),
+        )
+        for e in data["findings"]
+    ]
+
+
+def write_baseline(path: pathlib.Path, findings: Sequence[Finding]) -> None:
+    payload = {
+        "version": BASELINE_VERSION,
+        "findings": [f.to_json() for f in findings],
+    }
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+
+
+def split_baselined(
+    findings: Sequence[Finding], baseline: Sequence[Finding]
+) -> Tuple[List[Finding], List[Finding]]:
+    """-> (new, baselined) by line-free baseline key."""
+    keys = {f.baseline_key for f in baseline}
+    new = [f for f in findings if f.baseline_key not in keys]
+    old = [f for f in findings if f.baseline_key in keys]
+    return new, old

@@ -1,0 +1,47 @@
+"""replint reporters — human (terminal) and JSON (CI artifact)."""
+from __future__ import annotations
+
+import json
+from typing import List, Sequence
+
+from .core import Finding, LintResult
+
+JSON_SCHEMA_VERSION = 1
+
+
+def render_human(
+    result: LintResult,
+    new: Sequence[Finding],
+    baselined: Sequence[Finding],
+) -> str:
+    lines: List[str] = [f.render() for f in new]
+    lines.append(
+        f"replint: {len(new)} finding{'s' if len(new) != 1 else ''} "
+        f"({len(baselined)} baselined, {len(result.suppressed)} suppressed) "
+        f"across {result.files} files"
+    )
+    return "\n".join(lines)
+
+
+def render_json(
+    result: LintResult,
+    new: Sequence[Finding],
+    baselined: Sequence[Finding],
+) -> str:
+    by_rule: dict = {}
+    for f in new:
+        by_rule[f.rule] = by_rule.get(f.rule, 0) + 1
+    payload = {
+        "version": JSON_SCHEMA_VERSION,
+        "files": result.files,
+        "findings": [f.to_json() for f in new],
+        "baselined": [f.to_json() for f in baselined],
+        "suppressed": [f.to_json() for f in result.suppressed],
+        "counts": {
+            "new": len(new),
+            "baselined": len(baselined),
+            "suppressed": len(result.suppressed),
+            "by_rule": dict(sorted(by_rule.items())),
+        },
+    }
+    return json.dumps(payload, indent=2, sort_keys=True)

@@ -1,0 +1,9 @@
+"""Rule modules register themselves on import; import them all here so
+``import repro.analysis.lint`` yields a fully-populated registry."""
+from . import (  # noqa: F401
+    lock_discipline,
+    pallas_hygiene,
+    swallowed_exception,
+    thread_lifecycle,
+    wall_clock,
+)

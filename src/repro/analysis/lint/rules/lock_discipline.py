@@ -1,0 +1,340 @@
+"""Rules ``lock-discipline`` and ``lock-order`` — class-level lock hygiene.
+
+The serving stack (PipelineServer, MultiModelServer, FleetRouter) is a
+web of worker threads coordinating through per-object locks; its two
+recurring hand-found bug shapes are
+
+1. an attribute that is written under ``with self._lock`` in one method
+   and bare in another — a data race the tests only catch when the
+   interleaving cooperates, and
+2. two locks acquired in opposite orders on different code paths — a
+   deadlock that *no* test catches until it hangs CI.
+
+Both are structural properties of the class, so we check them
+structurally.  Per class:
+
+* **lock attributes** are ``self.X = threading.Lock()/RLock()/
+  Condition()/Semaphore()`` assignments anywhere in the class;
+* every method is walked with the set of currently-held self-locks
+  (``with self._lock:`` blocks, including multi-item withs).  Nested
+  ``def``\\ s (worker closures handed to threads) reset the held set —
+  locks held where a closure is *defined* are not held when it *runs*;
+* attribute **writes** (assign/augassign/annassign/del) are recorded
+  with the held set.  An attribute written at least once under a lock
+  and at least once bare (outside ``__init__``, which happens-before
+  every thread) is flagged at each bare site → ``lock-discipline``;
+* a **lock-acquisition graph** is built: acquiring ``B`` while holding
+  ``A`` adds edge A→B, and calling ``self.m()`` while holding ``A``
+  adds A→x for every lock ``m`` acquires transitively (synchronous
+  self-calls resolved within the class).  Any strongly-connected
+  component of ≥ 2 locks is a potential lock-order inversion →
+  ``lock-order``.  Self-edges are ignored (RLock/Condition re-entry
+  and the coarseness of call-closure would make them noise).
+
+Known limits (document, don't pretend): container mutation through
+method calls (``self.q.append(...)``) is not tracked, only rebinding;
+locks passed across objects are invisible; ``self`` is assumed to be
+the receiver name.  Suppress with a reason where a bare write is
+single-threaded by construction (e.g. in ``start()`` before workers
+exist).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, FrozenSet, Iterator, List, Optional, Set, Tuple
+
+from ..core import Finding, ModuleInfo, Rule, dotted_name, register
+
+_LOCK_FACTORIES = {"Lock", "RLock", "Condition", "Semaphore", "BoundedSemaphore"}
+
+
+@dataclasses.dataclass
+class _ClassFacts:
+    name: str
+    locks: Set[str]
+    # (attr, method-label, line, held-locks)
+    mutations: List[Tuple[str, str, int, FrozenSet[str]]]
+    # (acquired-lock, method-label, line, locks-held-before)
+    acquires: List[Tuple[str, str, int, FrozenSet[str]]]
+    # (callee, method-label, line, held-locks)
+    calls: List[Tuple[str, str, int, FrozenSet[str]]]
+    # per top-level method: locks acquired / self-methods called
+    # synchronously in its body (nested defs excluded — they run later)
+    body_acquires: Dict[str, Set[str]]
+    body_calls: Dict[str, Set[str]]
+
+
+def _lock_attrs(cls: ast.ClassDef, mod: ModuleInfo) -> Set[str]:
+    locks: Set[str] = set()
+    for node in ast.walk(cls):
+        if not isinstance(node, ast.Assign) or not isinstance(node.value, ast.Call):
+            continue
+        resolved = mod.resolve(node.value.func) or ""
+        if resolved.rsplit(".", 1)[-1] not in _LOCK_FACTORIES:
+            continue
+        for t in node.targets:
+            if (
+                isinstance(t, ast.Attribute)
+                and isinstance(t.value, ast.Name)
+                and t.value.id == "self"
+            ):
+                locks.add(t.attr)
+    return locks
+
+
+def _self_lock(expr: ast.expr, locks: Set[str]) -> Optional[str]:
+    if (
+        isinstance(expr, ast.Attribute)
+        and isinstance(expr.value, ast.Name)
+        and expr.value.id == "self"
+        and expr.attr in locks
+    ):
+        return expr.attr
+    return None
+
+
+def _self_attr_target(t: ast.expr) -> Optional[ast.Attribute]:
+    if (
+        isinstance(t, ast.Attribute)
+        and isinstance(t.value, ast.Name)
+        and t.value.id == "self"
+    ):
+        return t
+    return None
+
+
+def _analyze_class(cls: ast.ClassDef, mod: ModuleInfo) -> _ClassFacts:
+    facts = _ClassFacts(cls.name, _lock_attrs(cls, mod), [], [], [], {}, {})
+
+    def scan_expr(expr: ast.expr, held: FrozenSet[str], label: str, top: Optional[str]) -> None:
+        for n in ast.walk(expr):
+            if (
+                isinstance(n, ast.Call)
+                and isinstance(n.func, ast.Attribute)
+                and isinstance(n.func.value, ast.Name)
+                and n.func.value.id == "self"
+            ):
+                facts.calls.append((n.func.attr, label, n.lineno, held))
+                if top is not None:
+                    facts.body_calls[top].add(n.func.attr)
+
+    def record_mutation(t: ast.expr, held: FrozenSet[str], label: str) -> None:
+        targets = t.elts if isinstance(t, (ast.Tuple, ast.List)) else [t]
+        for tt in targets:
+            attr = _self_attr_target(tt)
+            if attr is not None and attr.attr not in facts.locks:
+                facts.mutations.append((attr.attr, label, tt.lineno, held))
+
+    def visit(node: ast.stmt, held: FrozenSet[str], label: str, top: Optional[str]) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # a closure: runs later (often on a worker thread) — locks
+            # held at definition are NOT held at execution
+            for s in node.body:
+                visit(s, frozenset(), f"{label}.{node.name}", None)
+            return
+        if isinstance(node, ast.ClassDef):
+            return
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            newheld = set(held)
+            for item in node.items:
+                scan_expr(item.context_expr, frozenset(newheld), label, top)
+                ln = _self_lock(item.context_expr, facts.locks)
+                if ln is not None and ln not in newheld:
+                    # re-entering an already-held lock adds no ordering
+                    facts.acquires.append(
+                        (ln, label, node.lineno, frozenset(newheld))
+                    )
+                    if top is not None:
+                        facts.body_acquires[top].add(ln)
+                    newheld.add(ln)
+            for s in node.body:
+                visit(s, frozenset(newheld), label, top)
+            return
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            tgts = node.targets if isinstance(node, ast.Assign) else [node.target]
+            for t in tgts:
+                record_mutation(t, held, label)
+        elif isinstance(node, ast.Delete):
+            for t in node.targets:
+                record_mutation(t, held, label)
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.stmt):
+                visit(child, held, label, top)
+            elif isinstance(child, ast.excepthandler):
+                for s in child.body:
+                    visit(s, held, label, top)
+            elif isinstance(child, ast.expr):
+                scan_expr(child, held, label, top)
+
+    for item in cls.body:
+        if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            facts.body_acquires[item.name] = set()
+            facts.body_calls[item.name] = set()
+            for s in item.body:
+                visit(s, frozenset(), item.name, item.name)
+    return facts
+
+
+def _facts_for_module(mod: ModuleInfo) -> List[_ClassFacts]:
+    if "lock_facts" not in mod._cache:
+        mod._cache["lock_facts"] = [
+            _analyze_class(node, mod)
+            for node in ast.walk(mod.tree)
+            if isinstance(node, ast.ClassDef)
+        ]
+    return mod._cache["lock_facts"]  # type: ignore[return-value]
+
+
+def _acquired_closure(facts: _ClassFacts) -> Dict[str, Set[str]]:
+    """Per top-level method: every lock a synchronous call chain from it
+    can acquire (memoized DFS; cycles in the call graph terminate via
+    the in-progress guard)."""
+    memo: Dict[str, Set[str]] = {}
+
+    def go(m: str, stack: Set[str]) -> Set[str]:
+        if m in memo:
+            return memo[m]
+        if m in stack or m not in facts.body_acquires:
+            return set()
+        stack.add(m)
+        out = set(facts.body_acquires[m])
+        for callee in facts.body_calls[m]:
+            out |= go(callee, stack)
+        stack.discard(m)
+        memo[m] = out
+        return out
+
+    for m in facts.body_acquires:
+        go(m, set())
+    return memo
+
+
+def _sccs(adj: Dict[str, Set[str]]) -> List[List[str]]:
+    """Tarjan SCCs (iterative-enough for lock graphs of a handful of
+    nodes); returns components with >= 2 members."""
+    index: Dict[str, int] = {}
+    low: Dict[str, int] = {}
+    on_stack: Set[str] = set()
+    stack: List[str] = []
+    out: List[List[str]] = []
+    counter = [0]
+
+    def strongconnect(v: str) -> None:
+        index[v] = low[v] = counter[0]
+        counter[0] += 1
+        stack.append(v)
+        on_stack.add(v)
+        for w in sorted(adj.get(v, ())):
+            if w not in index:
+                strongconnect(w)
+                low[v] = min(low[v], low[w])
+            elif w in on_stack:
+                low[v] = min(low[v], index[w])
+        if low[v] == index[v]:
+            comp = []
+            while True:
+                w = stack.pop()
+                on_stack.discard(w)
+                comp.append(w)
+                if w == v:
+                    break
+            if len(comp) >= 2:
+                out.append(sorted(comp))
+
+    for v in sorted(adj):
+        if v not in index:
+            strongconnect(v)
+    return out
+
+
+@register
+class LockDisciplineRule(Rule):
+    id = "lock-discipline"
+    description = (
+        "attributes written both under `with self._lock` and bare "
+        "across a class's methods are inconsistently guarded"
+    )
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        for facts in _facts_for_module(mod):
+            if not facts.locks:
+                continue
+            guarded: Dict[str, Set[str]] = {}
+            guard_locks: Dict[str, Set[str]] = {}
+            bare: Dict[str, List[Tuple[str, int]]] = {}
+            for attr, label, line, held in facts.mutations:
+                if label == "__init__":
+                    continue  # happens-before every worker thread
+                if held:
+                    guarded.setdefault(attr, set()).add(label)
+                    guard_locks.setdefault(attr, set()).update(held)
+                else:
+                    bare.setdefault(attr, []).append((label, line))
+            for attr in sorted(set(guarded) & set(bare)):
+                locks = "/".join(f"self.{x}" for x in sorted(guard_locks[attr]))
+                methods = ", ".join(sorted(guarded[attr]))
+                for label, line in bare[attr]:
+                    yield Finding(
+                        self.id,
+                        mod.relpath,
+                        line,
+                        f"self.{attr} is written under {locks} in "
+                        f"{methods} but written unguarded in {label} — "
+                        "inconsistently guarded state (take the lock or "
+                        "suppress with the reason it is safe)",
+                        symbol=f"{facts.name}.{attr}",
+                    )
+
+
+@register
+class LockOrderRule(Rule):
+    id = "lock-order"
+    description = (
+        "cycle in the cross-method lock-acquisition graph "
+        "(potential lock-order inversion / deadlock)"
+    )
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        for facts in _facts_for_module(mod):
+            if len(facts.locks) < 2:
+                continue
+            closure = _acquired_closure(facts)
+            edges: Dict[Tuple[str, str], int] = {}  # (src, dst) -> first line
+
+            def add(src: str, dst: str, line: int) -> None:
+                if src != dst:  # re-entry / closure coarseness: not an order
+                    edges.setdefault((src, dst), line)
+
+            for lock, _label, line, held in facts.acquires:
+                for h in held:
+                    add(h, lock, line)
+            for callee, _label, line, held in facts.calls:
+                if not held or callee not in closure:
+                    continue
+                for h in held:
+                    for acquired in closure[callee]:
+                        add(h, acquired, line)
+
+            adj: Dict[str, Set[str]] = {}
+            for (src, dst), _line in edges.items():
+                adj.setdefault(src, set()).add(dst)
+                adj.setdefault(dst, set())
+            for comp in _sccs(adj):
+                comp_set = set(comp)
+                lines = [
+                    line
+                    for (src, dst), line in edges.items()
+                    if src in comp_set and dst in comp_set
+                ]
+                names = ", ".join(f"self.{x}" for x in comp)
+                yield Finding(
+                    self.id,
+                    mod.relpath,
+                    min(lines),
+                    f"potential lock-order inversion in class "
+                    f"{facts.name}: {names} are acquired in conflicting "
+                    "orders on different code paths (deadlock risk) — "
+                    "impose a single acquisition order",
+                    symbol=f"{facts.name}:{'<'.join(comp)}",
+                )

@@ -1,0 +1,190 @@
+"""Rule ``pallas-hygiene`` — pallas_call sites follow the kernel contract.
+
+Two invariants from PR 3 (kernels/config.py and the descriptor-keyed
+autotuner) that every later kernel must keep:
+
+* **interpret routing** — a ``pl.pallas_call`` must resolve its
+  ``interpret`` flag through ``repro.kernels.config.default_interpret``
+  (platform default + ``REPRO_PALLAS_INTERPRET`` override).  A
+  hard-coded ``interpret=True`` silently runs the ~100x-slower
+  interpreter on TPU; a missing ``interpret=`` crashes off-TPU.
+  Accepted forms: ``interpret=default_interpret(...)`` at the call, a
+  local name assigned from ``default_interpret(...)`` in the enclosing
+  function, or a parameter of the enclosing function in a module that
+  imports ``default_interpret`` (the private-impl pattern in
+  conv_fused.py, where the public wrapper resolves and plumbs it).
+
+* **static grid/block shapes** — ``grid=`` components and
+  ``BlockSpec`` block shapes must be descriptor-derived Python values
+  (ints, arithmetic, ``.shape`` reads, ``cdiv``-style helpers), never
+  traced values: a ``jnp.``/``jax.`` expression in the grid retraces
+  per shape at best and fails to lower at worst, and it breaks the
+  autotuner's assumption that (geometry, blocks) keys are static.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from ..core import Finding, ModuleInfo, Rule, register
+
+_ALLOWED_GRID_CALLS = {
+    "len",
+    "min",
+    "max",
+    "int",
+    "sum",
+    "range",
+    "tuple",
+    "divmod",
+    "cdiv",
+    "ceil_div",
+}
+
+
+def _is_pallas_call(node: ast.Call, mod: ModuleInfo) -> bool:
+    resolved = mod.resolve(node.func) or ""
+    return resolved.rsplit(".", 1)[-1] == "pallas_call"
+
+
+def _dynamic_subexpr(expr: ast.expr, mod: ModuleInfo) -> Optional[str]:
+    """First jax-traced construct inside a grid/block-shape expression,
+    rendered for the message; None when the expression is static.
+
+    Allowed calls (``pl.cdiv`` and friends) are recursed into through
+    their *arguments* only — their func attribute resolves into the
+    jax namespace but computes a static int."""
+    if isinstance(expr, ast.Call):
+        fname = (mod.resolve(expr.func) or ast.unparse(expr.func)).rsplit(
+            ".", 1
+        )[-1]
+        if fname not in _ALLOWED_GRID_CALLS:
+            return ast.unparse(expr.func)
+        for sub in list(expr.args) + [kw.value for kw in expr.keywords]:
+            dyn = _dynamic_subexpr(sub, mod)
+            if dyn is not None:
+                return dyn
+        return None
+    if isinstance(expr, (ast.Name, ast.Attribute)):
+        resolved = mod.resolve(expr) or ""
+        if resolved == "jax" or resolved.startswith(("jax.", "jnp.")):
+            return ast.unparse(expr)
+        return None  # plain names / .shape chains are static under jit
+    for child in ast.iter_child_nodes(expr):
+        if isinstance(child, ast.expr):
+            dyn = _dynamic_subexpr(child, mod)
+            if dyn is not None:
+                return dyn
+    return None
+
+
+def _routes_interpret(value: ast.expr, node: ast.Call, mod: ModuleInfo) -> bool:
+    resolved = mod.resolve(value) or ""
+    if isinstance(value, ast.Call):
+        fname = (mod.resolve(value.func) or "").rsplit(".", 1)[-1]
+        return fname == "default_interpret"
+    if isinstance(value, ast.Name):
+        fn = mod.enclosing_function(node)
+        if fn is None:
+            return False
+        for n in ast.walk(fn):
+            if (
+                isinstance(n, ast.Assign)
+                and isinstance(n.value, ast.Call)
+                and (mod.resolve(n.value.func) or "").rsplit(".", 1)[-1]
+                == "default_interpret"
+                and any(
+                    isinstance(t, ast.Name) and t.id == value.id
+                    for t in n.targets
+                )
+            ):
+                return True
+        params = {a.arg for a in fn.args.args + fn.args.kwonlyargs}
+        return value.id in params and mod.imports("default_interpret")
+    return bool(resolved)  # attribute read (e.g. a config object) — accept
+
+
+@register
+class PallasHygieneRule(Rule):
+    id = "pallas-hygiene"
+    description = (
+        "pallas_call must route interpret through kernels/config.py and "
+        "use static (descriptor-derived) grid/block shapes"
+    )
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call) and _is_pallas_call(node, mod)):
+                continue
+            fn = mod.enclosing_function(node)
+            where = fn.name if fn is not None else "<module>"
+            interp = next(
+                (kw.value for kw in node.keywords if kw.arg == "interpret"), None
+            )
+            if interp is None:
+                yield Finding(
+                    self.id,
+                    mod.relpath,
+                    node.lineno,
+                    f"pallas_call in {where} has no interpret= — route it "
+                    "through repro.kernels.config.default_interpret so the "
+                    "platform default and REPRO_PALLAS_INTERPRET apply",
+                    symbol=f"interpret-missing:{where}",
+                )
+            elif isinstance(interp, ast.Constant):
+                yield Finding(
+                    self.id,
+                    mod.relpath,
+                    interp.lineno,
+                    f"pallas_call in {where} hard-codes "
+                    f"interpret={interp.value!r} — resolve it via "
+                    "default_interpret() (hard-coded True interprets on "
+                    "TPU at ~100x slowdown; False crashes off-TPU)",
+                    symbol=f"interpret-hardcoded:{where}",
+                )
+            elif not _routes_interpret(interp, node, mod):
+                yield Finding(
+                    self.id,
+                    mod.relpath,
+                    interp.lineno,
+                    f"pallas_call in {where} takes interpret from "
+                    f"`{ast.unparse(interp)}`, which is not resolved via "
+                    "default_interpret() in this function",
+                    symbol=f"interpret-unrouted:{where}",
+                )
+            # grid and BlockSpec shapes must be static
+            grid = next((kw.value for kw in node.keywords if kw.arg == "grid"), None)
+            if grid is not None:
+                dyn = _dynamic_subexpr(grid, mod)
+                if dyn is not None:
+                    yield Finding(
+                        self.id,
+                        mod.relpath,
+                        grid.lineno,
+                        f"pallas_call grid in {where} contains traced/"
+                        f"non-static expression `{dyn}` — grids must be "
+                        "static, descriptor-derived Python ints",
+                        symbol=f"grid-dynamic:{where}",
+                    )
+            for sub in ast.walk(node):
+                if not isinstance(sub, ast.Call) or sub is node:
+                    continue
+                if (mod.resolve(sub.func) or "").rsplit(".", 1)[-1] != "BlockSpec":
+                    continue
+                shape = sub.args[0] if sub.args else next(
+                    (kw.value for kw in sub.keywords if kw.arg == "block_shape"),
+                    None,
+                )
+                if shape is None:
+                    continue
+                dyn = _dynamic_subexpr(shape, mod)
+                if dyn is not None:
+                    yield Finding(
+                        self.id,
+                        mod.relpath,
+                        shape.lineno,
+                        f"BlockSpec block shape in {where} contains traced/"
+                        f"non-static expression `{dyn}` — block shapes must "
+                        "be static, descriptor-derived Python ints",
+                        symbol=f"block-dynamic:{where}",
+                    )

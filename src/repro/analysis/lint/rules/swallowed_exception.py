@@ -1,0 +1,167 @@
+"""Rule ``swallowed-exception`` — broad catches must not go silent.
+
+PR 5 hand-fixed a family of ``except Exception: pass`` sites on the
+egress path where a raising done-callback silently killed result
+delivery; PR 9 hand-fixed ``except BaseException`` unwind paths that
+swallowed ``KeyboardInterrupt``.  This rule fossilizes both classes:
+
+* ``except Exception`` (or a tuple containing it) must log, re-raise,
+  or at least capture the bound exception object somewhere — a body
+  that never references the error is a black hole.
+* ``except BaseException`` and bare ``except:`` additionally catch
+  ``KeyboardInterrupt``/``SystemExit``; the handler must keep an exit
+  path for them: a ``raise`` on some path (bare re-raise or an
+  isinstance-guarded one), *capturing* the bound exception object
+  (``first = e`` for a deferred re-raise, ``errors.append(e)`` as a
+  worker thread's error channel, ``ticket._fail(e)`` to surface it to
+  a client), or an earlier sibling handler on the same ``try`` that
+  already catches ``KeyboardInterrupt``/``SystemExit``.  Logging alone
+  is not enough — PR 9's rollback bug logged the interrupt and kept
+  serving.
+
+Narrow handlers (``except ValueError``, ``except queue.Empty: pass``,
+``except (KeyboardInterrupt, SystemExit)``) are out of scope: naming
+the exception type is the author stating they expect and absorb it.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from ..core import Finding, ModuleInfo, Rule, register
+
+_LOG_METHODS = {
+    "debug",
+    "info",
+    "warning",
+    "warn",
+    "error",
+    "exception",
+    "critical",
+    "log",
+    "print_exc",
+    "print_exception",
+}
+
+
+def _is_log_call(node: ast.Call, mod: ModuleInfo) -> bool:
+    func = node.func
+    if isinstance(func, ast.Attribute) and func.attr in _LOG_METHODS:
+        return True
+    if isinstance(func, ast.Name) and func.id == "print":
+        return True
+    resolved = mod.resolve(func) or ""
+    return resolved == "warnings.warn" or "log" in resolved.lower()
+
+
+def _classify(handler: ast.ExceptHandler, mod: ModuleInfo) -> Optional[str]:
+    """-> 'base' | 'exception' | None (narrow)."""
+    t = handler.type
+    if t is None:
+        return "base"  # bare except: catches BaseException
+    elems = list(t.elts) if isinstance(t, ast.Tuple) else [t]
+    names = {mod.resolve(e) or "" for e in elems}
+    leaves = {n.rsplit(".", 1)[-1] for n in names}
+    if "BaseException" in leaves:
+        return "base"
+    if "Exception" in leaves:
+        return "exception"
+    return None
+
+
+def _sibling_catches_interrupt(
+    handler: ast.ExceptHandler, mod: ModuleInfo
+) -> bool:
+    """True when an earlier handler on the same ``try`` already catches
+    KeyboardInterrupt or SystemExit — the broad handler below it can no
+    longer swallow them."""
+    parent = mod.parents.get(handler)
+    if not isinstance(parent, ast.Try):
+        return False
+    for h in parent.handlers:
+        if h is handler:
+            return False
+        t = h.type
+        if t is None:
+            continue
+        elems = list(t.elts) if isinstance(t, ast.Tuple) else [t]
+        leaves = {
+            (mod.resolve(e) or "").rsplit(".", 1)[-1] for e in elems
+        }
+        if leaves & {"KeyboardInterrupt", "SystemExit", "BaseException"}:
+            return True
+    return False
+
+
+def _references(handler: ast.ExceptHandler) -> bool:
+    """True if the body reads the bound exception variable (stored,
+    appended, formatted — anything but dropped on the floor)."""
+    if not handler.name:
+        return False
+    return any(
+        isinstance(n, ast.Name)
+        and n.id == handler.name
+        and isinstance(n.ctx, ast.Load)
+        for stmt in handler.body
+        for n in ast.walk(stmt)
+    )
+
+
+@register
+class SwallowedExceptionRule(Rule):
+    id = "swallowed-exception"
+    description = (
+        "broad except must log/re-raise/capture; except BaseException "
+        "must re-raise KeyboardInterrupt/SystemExit"
+    )
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            kind = _classify(node, mod)
+            if kind is None:
+                continue
+            has_raise = any(
+                isinstance(n, ast.Raise)
+                for stmt in node.body
+                for n in ast.walk(stmt)
+            )
+            has_log = any(
+                isinstance(n, ast.Call) and _is_log_call(n, mod)
+                for stmt in node.body
+                for n in ast.walk(stmt)
+            )
+            fn = mod.enclosing_function(node)
+            where = f" in {fn.name}()" if fn is not None else ""
+            if kind == "base":
+                if not (
+                    has_raise
+                    or _references(node)
+                    or _sibling_catches_interrupt(node, mod)
+                ):
+                    caught = (
+                        "bare except" if node.type is None else "except BaseException"
+                    )
+                    yield Finding(
+                        self.id,
+                        mod.relpath,
+                        node.lineno,
+                        f"{caught}{where} neither re-raises nor captures "
+                        "the error — KeyboardInterrupt/SystemExit die "
+                        "here; add a guarded `raise`, store the bound "
+                        "exception for deferred handling, or catch "
+                        "Exception",
+                        symbol=f"base:{fn.name if fn else '<module>'}",
+                    )
+            else:  # broad Exception
+                if not (has_raise or has_log or _references(node)):
+                    yield Finding(
+                        self.id,
+                        mod.relpath,
+                        node.lineno,
+                        f"broad `except Exception`{where} swallows the "
+                        "error silently — log it, re-raise, or narrow "
+                        "the exception type",
+                        symbol=f"exception:{fn.name if fn else '<module>'}",
+                    )

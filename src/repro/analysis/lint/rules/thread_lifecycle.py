@@ -1,0 +1,154 @@
+"""Rule ``thread-lifecycle`` — every thread needs an end-of-life story.
+
+A ``threading.Thread`` with neither ``daemon=True`` nor a reachable
+``join()`` outlives its creator: tests hang at interpreter exit,
+servers "stop" while workers still drain queues, and CI wall-clock
+budgets quietly inflate.  PR 8 made ``stop()`` fail loudly on wedged
+workers precisely because leaked threads had been masking bugs.
+
+Accepted lifecycles, in the order they are checked:
+
+* ``daemon=True`` in the constructor, or a later ``<handle>.daemon =
+  True`` assignment — explicitly declared fire-and-forget;
+* bound to a local name that is ``.join()``-ed somewhere in the same
+  function scope;
+* bound to ``self.X`` with a ``self.X.join(...)`` anywhere in the
+  class (the monitor-object pattern: started in ``start``, joined in
+  ``stop``);
+* created inside a list (literal/comprehension/``append``) in a
+  function whose scope contains any ``.join(`` call — the
+  spawn-many-then-join-the-list idiom; matching each element to its
+  join would need dataflow we don't want, and a function that joins
+  *something* over a thread list is not the leak this rule hunts.
+
+Anything else — including ``threading.Thread(...).start()`` with no
+handle at all — is flagged.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from ..core import Finding, ModuleInfo, Rule, register
+
+
+def _is_thread_ctor(node: ast.Call, mod: ModuleInfo) -> bool:
+    resolved = mod.resolve(node.func) or ""
+    return resolved == "threading.Thread" or resolved.endswith(".threading.Thread")
+
+
+def _daemon_true(node: ast.Call) -> bool:
+    return any(
+        kw.arg == "daemon"
+        and isinstance(kw.value, ast.Constant)
+        and kw.value.value is True
+        for kw in node.keywords
+    )
+
+
+def _scope_of(mod: ModuleInfo, node: ast.AST) -> ast.AST:
+    return mod.enclosing_function(node) or mod.tree
+
+
+def _joins_name(scope: ast.AST, name: str) -> bool:
+    for n in ast.walk(scope):
+        if (
+            isinstance(n, ast.Call)
+            and isinstance(n.func, ast.Attribute)
+            and n.func.attr == "join"
+            and isinstance(n.func.value, ast.Name)
+            and n.func.value.id == name
+        ):
+            return True
+        if (  # t.daemon = True after construction
+            isinstance(n, ast.Assign)
+            and any(
+                isinstance(t, ast.Attribute)
+                and t.attr == "daemon"
+                and isinstance(t.value, ast.Name)
+                and t.value.id == name
+                for t in n.targets
+            )
+            and isinstance(n.value, ast.Constant)
+            and n.value.value is True
+        ):
+            return True
+    return False
+
+
+def _joins_self_attr(cls: ast.ClassDef, attr: str) -> bool:
+    for n in ast.walk(cls):
+        if (
+            isinstance(n, ast.Call)
+            and isinstance(n.func, ast.Attribute)
+            and n.func.attr == "join"
+            and isinstance(n.func.value, ast.Attribute)
+            and n.func.value.attr == attr
+            and isinstance(n.func.value.value, ast.Name)
+            and n.func.value.value.id == "self"
+        ):
+            return True
+    return False
+
+
+def _any_join(scope: ast.AST) -> bool:
+    return any(
+        isinstance(n, ast.Call)
+        and isinstance(n.func, ast.Attribute)
+        and n.func.attr == "join"
+        and not isinstance(n.func.value, ast.Constant)  # ", ".join(...)
+        for n in ast.walk(scope)
+    )
+
+
+@register
+class ThreadLifecycleRule(Rule):
+    id = "thread-lifecycle"
+    description = (
+        "threading.Thread started without daemon=True or a reachable "
+        "join()/stop path"
+    )
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call) and _is_thread_ctor(node, mod)):
+                continue
+            if _daemon_true(node):
+                continue
+            if self._has_lifecycle(mod, node):
+                continue
+            fn = mod.enclosing_function(node)
+            where = fn.name if fn is not None else "<module>"
+            yield Finding(
+                self.id,
+                mod.relpath,
+                node.lineno,
+                f"thread created in {where} has neither daemon=True nor "
+                "a reachable join() — it outlives its creator (join it, "
+                "join the list it lands in, or declare it daemon)",
+                symbol=f"thread:{where}",
+            )
+
+    def _has_lifecycle(self, mod: ModuleInfo, node: ast.Call) -> bool:
+        scope = _scope_of(mod, node)
+        parent = mod.parents.get(node)
+        # unwrap `threading.Thread(...).start()`: parent chain is
+        # Attribute -> Call; no handle exists, so only daemon= saves it
+        if isinstance(parent, ast.Attribute) and parent.attr == "start":
+            return False
+        if isinstance(parent, ast.Assign):
+            for t in parent.targets:
+                if isinstance(t, ast.Name) and _joins_name(scope, t.id):
+                    return True
+                if (
+                    isinstance(t, ast.Attribute)
+                    and isinstance(t.value, ast.Name)
+                    and t.value.id == "self"
+                ):
+                    cls = mod.enclosing_class(node)
+                    if cls is not None and _joins_self_attr(cls, t.attr):
+                        return True
+            return False
+        # list literal / comprehension / append(...) / other flows:
+        # accept if the surrounding function joins anything
+        return _any_join(scope)

@@ -1,0 +1,68 @@
+"""Rule ``wall-clock`` — no wall-clock reads in timing paths.
+
+``time.time()`` (and the ``datetime`` now/today family) measures the
+wall clock, which steps backwards under NTP corrections and manual
+clock changes.  Every duration, deadline, or rate in the serving and
+launch layers must come from ``time.monotonic()`` /
+``time.perf_counter()`` — PR 9 swept the serving tree by hand and left
+a regex scan behind; this rule is that scan generalized to the AST
+(no false hits inside strings/comments, resolves ``from time import
+time`` aliasing) and widened to the benchmark and example scripts,
+whose reported numbers are timings too.
+
+Scope: files under ``serving/``, ``launch/``, ``benchmarks/``,
+``examples/`` and the discrete-event simulator.  Tests are out of
+scope — the hostile-clock regression test monkeypatches ``time.time``
+on purpose.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..core import Finding, ModuleInfo, Rule, register
+
+WALL_CALLS = {
+    "time.time": "time.monotonic() / time.perf_counter()",
+    "datetime.datetime.now": "time.monotonic() for durations",
+    "datetime.datetime.utcnow": "time.monotonic() for durations",
+    "datetime.datetime.today": "time.monotonic() for durations",
+    "datetime.date.today": "time.monotonic() for durations",
+}
+
+SCOPE_DIRS = ("serving/", "launch/", "benchmarks/", "examples/")
+SCOPE_FILES = ("core/simulator.py",)
+
+
+def in_scope(relpath: str) -> bool:
+    anchored = f"/{relpath}"
+    return any(f"/{d}" in anchored for d in SCOPE_DIRS) or any(
+        relpath.endswith(s) for s in SCOPE_FILES
+    )
+
+
+@register
+class WallClockRule(Rule):
+    id = "wall-clock"
+    description = (
+        "time.time()/datetime.now() banned in timing paths "
+        "(serving/, launch/, benchmarks/, examples/, core/simulator.py)"
+    )
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        if not in_scope(mod.relpath):
+            return
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            resolved = mod.resolve(node.func)
+            if resolved in WALL_CALLS:
+                yield Finding(
+                    self.id,
+                    mod.relpath,
+                    node.lineno,
+                    f"wall-clock call {resolved}() in a timing path — "
+                    f"use {WALL_CALLS[resolved]} (NTP steps move the "
+                    "wall clock backwards)",
+                    symbol=resolved,
+                )

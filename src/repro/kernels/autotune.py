@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import logging
 import os
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -51,6 +52,8 @@ import numpy as np
 
 from ..core.descriptors import ConvDescriptor
 from .config import default_interpret, on_tpu
+
+logger = logging.getLogger(__name__)
 
 _DEFAULT_CACHE = os.path.join(os.path.dirname(__file__), "autotune_cache.json")
 _ENV_CACHE = "REPRO_AUTOTUNE_CACHE"
@@ -288,6 +291,10 @@ class ConvAutotuner:
                     self.repeats,
                 )
             except Exception:  # a candidate the kernel cannot tile
+                logger.debug(
+                    "autotune %s: candidate %s failed to compile/run "
+                    "(dropped from the sweep)", key, cfg, exc_info=True,
+                )
                 continue
             if t < best_t:
                 best_cfg, best_t = cfg, t

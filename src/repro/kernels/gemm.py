@@ -23,7 +23,7 @@ try:  # TPU memory spaces; harmless on CPU interpret mode
     from jax.experimental.pallas import tpu as pltpu
 
     _VMEM = pltpu.VMEM
-except Exception:  # pragma: no cover
+except (ImportError, AttributeError):  # pragma: no cover
     pltpu = None
     _VMEM = None
 

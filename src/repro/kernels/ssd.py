@@ -24,7 +24,7 @@ try:
     from jax.experimental.pallas import tpu as pltpu
 
     _VMEM = pltpu.VMEM
-except Exception:  # pragma: no cover
+except (ImportError, AttributeError):  # pragma: no cover
     pltpu = None
     _VMEM = None
 

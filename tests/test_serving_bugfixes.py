@@ -3,15 +3,16 @@
 * Clock source: every serving/launch timing path must use a monotonic
   clock (``time.monotonic`` / ``time.perf_counter``), never the wall
   clock — NTP steps and manual clock changes must not corrupt latency
-  metrics, stall detection, or flush deadlines.  Pinned two ways: a
-  source scan, and a live server run under a hostile ``time.time``.
+  metrics, stall detection, or flush deadlines.  Pinned two ways: the
+  replint ``wall-clock`` AST rule (which superseded the regex source
+  scan that used to live here — see repro.analysis.lint), and a live
+  server run under a hostile ``time.time``.
 * Interrupt handling: the multi-model unwind paths (``stop``,
   ``swap_partition`` rollback) catch ``BaseException`` to keep peers
   shutting down — but a ``KeyboardInterrupt`` / ``SystemExit`` must
   still reach the caller, never be swallowed into a log.
 """
 import pathlib
-import re
 import time
 
 import jax.numpy as jnp
@@ -46,16 +47,22 @@ def tiny(name: str, ch: int = 8) -> Graph:
 def test_no_wall_clock_in_serving_or_launch():
     """``time.time()`` measures the wall clock and goes backwards on NTP
     steps; every duration / deadline in the serving and launch layers
-    must come from a monotonic source."""
-    offenders = []
-    for sub in ("serving", "launch"):
-        for path in sorted((SRC / sub).glob("*.py")):
-            for i, line in enumerate(path.read_text().splitlines(), 1):
-                if re.search(r"\btime\.time\(", line):
-                    offenders.append(f"{path.name}:{i}: {line.strip()}")
+    must come from a monotonic source.  Enforced by the replint
+    ``wall-clock`` rule — AST-based, so aliased imports count and
+    strings/comments don't (the regex scan this replaced had both
+    blind spots)."""
+    from repro.analysis.lint import run_lint
+
+    result = run_lint(
+        [SRC / "serving", SRC / "launch"],
+        select=["wall-clock"],
+        root=SRC.parent.parent,
+    )
+    offenders = [f.render() for f in result.findings]
     assert not offenders, "wall-clock timing in serving/launch:\n" + "\n".join(
         offenders
     )
+    assert result.files > 10  # the scan actually visited the tree
 
 
 def test_serving_survives_hostile_wall_clock(monkeypatch):
